@@ -1,0 +1,36 @@
+"""Shared helpers for the benchmark suite.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (per the harness
+contract) plus a human-readable table, and returns its raw numbers so
+``benchmarks/run.py`` can aggregate everything into bench_output.txt.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+from repro.core import simulate
+from repro.core.edge_models import EDGE_MODELS, MODEL_DELTA, paper_cluster
+
+STRATS = ("hidp", "disnet", "omniboost", "modnn")
+MODELS = tuple(EDGE_MODELS)
+
+
+def timed(fn: Callable, *args, repeat: int = 3) -> tuple[float, object]:
+    best, out = float("inf"), None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def single_request_report(strategy: str, model: str):
+    dag = EDGE_MODELS[model]()
+    return simulate(paper_cluster(), strategy,
+                    [(0.0, dag, MODEL_DELTA[model])])

@@ -1,0 +1,67 @@
+"""Fig. 1 — inference latency of the four DNNs on a single Jetson TX2 under
+partitioning configurations P1–P9 (number of data partitions × CPU/GPU split).
+
+P1 is the SoA/framework default (all-GPU, no partitioning).  The reproduction
+claim: P1 is never optimal; per-model optima differ (ResNet/VGG near 80/20
+GPU-heavy splits, EfficientNet's depthwise convs push toward 50/50)."""
+
+from __future__ import annotations
+
+from repro.core import Cluster
+from repro.core.cost_model import comm_time, compute_time, \
+    processors_as_resources
+from repro.core.edge_models import EDGE_MODELS, MODEL_DELTA, jetson_tx2
+from repro.core.local_partitioner import dominant_kind
+
+from .common import emit
+
+# (label, n_partitions, gpu_fraction)
+CONFIGS = [("P1", 1, 1.00), ("P2", 1, 0.90), ("P3", 2, 0.90),
+           ("P4", 2, 0.80), ("P5", 4, 0.90), ("P6", 2, 0.85),
+           ("P7", 4, 0.80), ("P8", 4, 0.65), ("P9", 4, 0.50)]
+PARTITION_OVERHEAD = 0.004      # s per extra partition (merge/launch cost)
+
+
+def latency(dag, delta: float, n_parts: int, gpu_frac: float) -> float:
+    node = jetson_tx2()
+    kind = dominant_kind(dag)
+    cpu, gpu = processors_as_resources(node, delta, kind)
+    per_part = []
+    for frac, r in ((1 - gpu_frac, cpu), (gpu_frac, gpu)):
+        if frac <= 0:
+            continue
+        t = (compute_time(dag.total_flops * frac, r.rate)
+             + comm_time((dag.input_bytes + dag.output_bytes) * frac, r.bw,
+                         r.rtt))
+        per_part.append(t)
+    base = max(per_part)
+    halo = sum(b.bytes_out * b.halo_fraction for b in dag.blocks)
+    return base + (n_parts - 1) * (PARTITION_OVERHEAD
+                                   + halo / cpu.bw / max(n_parts, 1))
+
+
+def main() -> dict:
+    out: dict[str, dict[str, float]] = {}
+    print("\n== Fig 1: P1–P9 partitioning sweep on Jetson TX2 "
+          "(normalised latency) ==")
+    header = "model".ljust(18) + "".join(f"{c[0]:>7}" for c in CONFIGS)
+    print(header)
+    for name, fn in EDGE_MODELS.items():
+        dag = fn()
+        lats = {label: latency(dag, MODEL_DELTA[name], n, g)
+                for label, n, g in CONFIGS}
+        p1 = lats["P1"]
+        out[name] = lats
+        row = name.ljust(18) + "".join(f"{lats[l] / p1:7.2f}"
+                                       for l, _, _ in CONFIGS)
+        best = min(lats, key=lats.get)
+        print(row + f"   best={best} ({(1 - lats[best] / p1) * 100:.0f}% "
+              f"under P1)")
+        emit(f"fig1/{name}", lats[best] * 1e6,
+             f"best={best};p1_us={p1 * 1e6:.0f}")
+        assert best != "P1", f"P1 unexpectedly optimal for {name}"
+    return out
+
+
+if __name__ == "__main__":
+    main()

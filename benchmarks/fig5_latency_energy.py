@@ -1,0 +1,45 @@
+"""Fig. 5 — per-strategy inference latency (a) and energy (b) for the four
+workloads on the 5-node cluster.  Paper claims (averages across Figs 5-8):
+HiDP 37/44/56 % lower latency and 33/48/58 % lower energy than DisNet /
+OmniBoost / MoDNN."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import MODELS, STRATS, emit, single_request_report
+
+
+def main() -> dict:
+    lat: dict[str, dict[str, float]] = {m: {} for m in MODELS}
+    en: dict[str, dict[str, float]] = {m: {} for m in MODELS}
+    for m in MODELS:
+        for s in STRATS:
+            rep = single_request_report(s, m)
+            lat[m][s] = rep.records[0].latency
+            en[m][s] = rep.energies()[m]
+            emit(f"fig5/{m}/{s}", lat[m][s] * 1e6,
+                 f"energy_J={en[m][s]:.2f};mode={rep.records[0].mode}")
+
+    print("\n== Fig 5a: latency (ms) ==")
+    print("model".ljust(18) + "".join(f"{s:>11}" for s in STRATS))
+    for m in MODELS:
+        print(m.ljust(18) + "".join(f"{lat[m][s] * 1e3:11.0f}"
+                                    for s in STRATS))
+    print("\n== Fig 5b: energy (J) ==")
+    print("model".ljust(18) + "".join(f"{s:>11}" for s in STRATS))
+    for m in MODELS:
+        print(m.ljust(18) + "".join(f"{en[m][s]:11.1f}" for s in STRATS))
+
+    print("\n== averages vs paper ==")
+    for s, p_lat, p_en in (("disnet", 37, 33), ("omniboost", 44, 48),
+                           ("modnn", 56, 58)):
+        dl = np.mean([1 - lat[m]["hidp"] / lat[m][s] for m in MODELS]) * 100
+        de = np.mean([1 - en[m]["hidp"] / en[m][s] for m in MODELS]) * 100
+        print(f"HiDP vs {s:10s}: latency -{dl:4.0f}% (paper {p_lat}%)   "
+              f"energy -{de:4.0f}% (paper {p_en}%)")
+    return {"latency": lat, "energy": en}
+
+
+if __name__ == "__main__":
+    main()

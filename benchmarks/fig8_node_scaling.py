@@ -1,0 +1,47 @@
+"""Fig. 8 — inference latency with 2–5 worker nodes.  Paper: HiDP lowest
+everywhere and its advantage GROWS as the cluster shrinks (the local tier
+matters most when there are few nodes); averages 30/46/38 % vs
+DisNet/OmniBoost/MoDNN."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import simulate
+from repro.core.edge_models import EDGE_MODELS, MODEL_DELTA, paper_cluster
+
+from .common import MODELS, STRATS, emit
+
+
+def main() -> dict:
+    out: dict[int, dict[str, float]] = {}
+    print("\n== Fig 8: mean latency (ms) vs cluster size ==")
+    print("nodes".ljust(8) + "".join(f"{s:>11}" for s in STRATS))
+    for n in (2, 3, 4, 5):
+        row = {}
+        for s in STRATS:
+            lats = []
+            for m in MODELS:
+                rep = simulate(paper_cluster(n), s,
+                               [(0.0, EDGE_MODELS[m](), MODEL_DELTA[m])])
+                lats.append(rep.records[0].latency)
+            row[s] = float(np.mean(lats))
+            emit(f"fig8/{n}nodes/{s}", row[s] * 1e6)
+        out[n] = row
+        print(f"{n}".ljust(8) + "".join(f"{row[s] * 1e3:11.0f}"
+                                        for s in STRATS))
+    # HiDP lowest at every cluster size (the paper's core Fig. 8 claim)
+    for n, row in out.items():
+        assert min(row, key=row.get) == "hidp", (n, row)
+    adv = {n: 1 - row["hidp"] / min(row[s] for s in STRATS[1:])
+           for n, row in out.items()}
+    print("\nHiDP advantage vs best baseline:",
+          {n: f"{a * 100:.0f}%" for n, a in sorted(adv.items())},
+          "(paper: gap grows as the cluster shrinks; here it is ~flat — "
+          "our wireless medium saturates later than theirs, see "
+          "EXPERIMENTS.md)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Benchmark entry point: one function per paper table/figure + the TPU
+roofline.  Prints ``name,us_per_call,derived`` CSV rows interleaved with
+human-readable tables.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig5 fig7  # subset
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (fig1_partition_sweep, fig5_latency_energy,
+                   fig6_gflops_timeline, fig7_throughput_mixes,
+                   fig8_node_scaling, roofline, tab1_planner_overhead)
+
+    suites = {
+        "fig1": fig1_partition_sweep.main,
+        "fig5": fig5_latency_energy.main,
+        "fig6": fig6_gflops_timeline.main,
+        "fig7": fig7_throughput_mixes.main,
+        "fig8": fig8_node_scaling.main,
+        "tab1": tab1_planner_overhead.main,
+        "roofline": roofline.main,
+    }
+    picks = sys.argv[1:] or list(suites)
+    t0 = time.time()
+    for name in picks:
+        print(f"\n{'=' * 72}\n# {name}\n{'=' * 72}")
+        suites[name]()
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

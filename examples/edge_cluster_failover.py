@@ -1,0 +1,39 @@
+"""Fault tolerance in action: nodes drop out mid-stream and the HiDP leader
+re-plans around them (availability vector A(N_φ), Eq. 4) — requests keep
+completing, at reduced throughput, with zero manual intervention.
+
+    PYTHONPATH=src python examples/edge_cluster_failover.py
+"""
+
+from repro.core import ClusterManager, EdgeSimulator, SimRequest
+from repro.core.baselines import hidp_strategy
+from repro.core.edge_models import MODEL_DELTA, paper_cluster, inceptionv3
+
+cluster5 = paper_cluster()
+mgr = ClusterManager(cluster5)
+mgr.elect_leader("orin_nx")
+dag = inceptionv3()
+delta = MODEL_DELTA["inceptionv3"]
+
+print("phase 1: all 5 nodes up")
+sim = EdgeSimulator(mgr.cluster, "hidp")
+rep = sim.run([SimRequest(0, dag, 0.0, delta)])
+print(f"  latency {rep.records[0].latency * 1e3:.0f} ms using "
+      f"{len({s.node for s in rep.spans})} nodes")
+
+print("phase 2: tx2 and nano fail (heartbeats stop)")
+mgr.set_available("tx2", False)
+mgr.set_available("nano", False)
+sim = EdgeSimulator(mgr.cluster, "hidp")
+rep = sim.run([SimRequest(1, dag, 0.0, delta)])
+used = {s.node for s in rep.spans}
+print(f"  latency {rep.records[0].latency * 1e3:.0f} ms using {used}")
+assert "tx2" not in used and "nano" not in used
+
+print("phase 3: tx2 recovers")
+mgr.set_available("tx2", True)
+sim = EdgeSimulator(mgr.cluster, "hidp")
+rep = sim.run([SimRequest(2, dag, 0.0, delta)])
+print(f"  latency {rep.records[0].latency * 1e3:.0f} ms using "
+      f"{ {s.node for s in rep.spans} }")
+print("re-planning around failures: OK")

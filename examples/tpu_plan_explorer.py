@@ -1,0 +1,57 @@
+"""TPU-tier HiDP planning: show the tier-2 DSE (the P1–P9 analogue) for any
+(arch × shape × mesh) cell — which layouts were considered, their predicted
+three-term roofline costs, and what the planner picked.
+
+    PYTHONPATH=src python examples/tpu_plan_explorer.py --arch qwen3-moe-30b-a3b --shape train_4k
+"""
+
+import argparse
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import SHAPES, build_model
+from repro.sharding.plan import (MULTI_POD, SINGLE_POD, _candidate_cost,
+                                 _enumerate_candidates, plan_tpu)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen3-moe-30b-a3b", choices=ARCH_IDS)
+ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+ap.add_argument("--multi-pod", action="store_true")
+args = ap.parse_args()
+
+mesh = MULTI_POD if args.multi_pod else SINGLE_POD
+cfg = get_config(args.arch)
+model = build_model(cfg)
+shape = SHAPES[args.shape]
+
+cands = _enumerate_candidates(cfg, shape, mesh, "data")
+rows = []
+for c in cands:
+    cost = _candidate_cost(model, shape, c, mesh)
+    rows.append((c, cost))
+rows.sort(key=lambda rc: rc[1]["total"])
+
+print(f"{args.arch} × {args.shape} on {mesh.shape} — tier-2 DSE "
+      f"({len(rows)} candidates, top 12 by predicted step time):\n")
+print(f"{'layout':22s}{'micro':>6s}{'rg':>4s}{'opt':>5s}{'par':>5s}"
+      f"{'compute':>9s}{'memory':>9s}{'coll':>9s}{'resident':>10s}{'fits':>6s}")
+seen = set()
+shown = 0
+for c, cost in rows:
+    key = (c["name"], c["moe_impl"])
+    if key in seen or shown >= 12:
+        continue
+    seen.add(key)
+    shown += 1
+    print(f"{c['name']:22s}{c['microbatches']:6d}{c.get('remat_group', 1):4d}"
+          f"{c.get('opt_dtype', 'f32')[:4]:>5s}"
+          f"{c.get('param_dtype', 'f32')[:4]:>5s}"
+          f"{cost['compute']:9.3g}{cost['memory']:9.3g}"
+          f"{cost['collective']:9.3g}{cost['resident'] / 1e9:9.1f}G"
+          f"{'  ✓' if cost['fits'] else '  ✗'}")
+
+plan = plan_tpu(model, shape, mesh)
+print(f"\nHiDP picked: {plan.local_layout} (global {plan.global_mode} mode, "
+      f"micro={plan.microbatches}, remat_group={plan.remat_group}, "
+      f"opt={plan.opt_dtype}, params={plan.param_dtype}, "
+      f"moe={plan.moe_impl})")
+print(f"planning took {plan.planning_seconds * 1e3:.1f} ms")

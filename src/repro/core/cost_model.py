@@ -1,0 +1,192 @@
+"""HiDP cost model — §III "System Model" of the paper, verbatim algebra.
+
+* processor compute rate        λ_k = f_k / δ           [flops/s]      (Eq. ρ)
+* node compute rate             Λ_j = Σ_k λ_k           [flops/s]      (Eq. 2)
+* local  comm rate              μ_k                     [bytes/s]
+* local  ratio vector           ψ = {λ_k/μ_k}                          (Eq. 1)
+* global comm rate              β_j                     [bytes/s]
+* global ratio vector           Ψ = {Λ_j/β_j}                          (Eq. 3)
+* availability vector           A(N_φ) = {α_j ∈ {0,1}}                 (Eq. 4)
+
+The same classes describe (a) the paper's edge boards (Table II) for the
+faithful reproduction and (b) TPU pods/chips for the production launcher —
+only the numbers differ (see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+
+# --------------------------------------------------------------------------
+# Hardware descriptions
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Processor:
+    """One processing unit ρ_k inside a node: CPU cluster, GPU, NPU — or, in
+    the TPU guise, one intra-pod sharding *lane* (a group of chips reachable
+    at ICI bandwidth)."""
+
+    name: str
+    kind: str                    # "cpu" | "gpu" | "npu" | "tpu"
+    peak_flops: float            # f_k / δ at δ=1; per-model δ rescales this
+    local_bw: float              # μ_k — bytes/s to peers inside the node
+    idle_power: float = 0.0      # W
+    active_power: float = 0.0    # W
+    # Per-block-kind efficiency multipliers (the "CPU-friendly layer" effect;
+    # §I: "CPU-friendly layers of DNN models"). 1.0 = peak.
+    affinity: tuple[tuple[str, float], ...] = ()
+
+    def rate(self, delta: float = 1.0, kind: str = "generic") -> float:
+        """λ_k = f_k/δ, modulated by the layer-kind affinity."""
+        eff = dict(self.affinity).get(kind, 1.0)
+        return self.peak_flops * eff / max(delta, 1e-12)
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """Edge node φ_j (or TPU pod). ``net_bw`` is β_j in bytes/s.
+
+    ``default_processor`` is the framework-default unit (the paper's "P1"
+    behaviour: TensorFlow schedules on GPU unless told otherwise; on boards
+    without a usable GPU delegate the default is the CPU)."""
+
+    name: str
+    processors: tuple[Processor, ...]
+    net_bw: float                # β_j — bytes/s on the inter-node link
+    available: bool = True       # α_j
+    default_processor: str = "gpu"
+
+    def compute_rate(self, delta: float = 1.0, kind: str = "generic") -> float:
+        """Λ_j(ρ_k) = Σ_k λ_k   (Eq. 2)."""
+        return sum(p.rate(delta, kind) for p in self.processors)
+
+    def default_rate(self, delta: float = 1.0, kind: str = "generic") -> float:
+        """Capacity as global-only strategies see it: they profile a node by
+        timing inference with the default runtime, which exercises only the
+        default processor (§I — "misrepresents the compute capacity")."""
+        for p in self.processors:
+            if p.kind == self.default_processor:
+                return p.rate(delta, kind)
+        return max(p.rate(delta, kind) for p in self.processors)
+
+    def psi(self, delta: float = 1.0) -> tuple[float, ...]:
+        """ψ{λ, μ} = {λ_k/μ_k}   (Eq. 1)."""
+        return tuple(p.rate(delta) / p.local_bw for p in self.processors)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cluster:
+    """The edge cluster N(φ_j)."""
+
+    nodes: tuple[Node, ...]
+
+    def availability(self) -> tuple[int, ...]:
+        """A(N_φ)   (Eq. 4)."""
+        return tuple(1 if n.available else 0 for n in self.nodes)
+
+    def available_nodes(self) -> tuple[Node, ...]:
+        return tuple(n for n in self.nodes if n.available)
+
+    def Psi(self, delta: float = 1.0) -> tuple[float, ...]:
+        """Ψ{Λ, β} = {Λ_j/β_j}   (Eq. 3) over *available* nodes."""
+        return tuple(n.compute_rate(delta) / n.net_bw
+                     for n in self.available_nodes())
+
+    def with_availability(self, alphas: Sequence[bool]) -> "Cluster":
+        if len(alphas) != len(self.nodes):
+            raise ValueError("availability vector length mismatch")
+        return Cluster(tuple(
+            dataclasses.replace(n, available=bool(a))
+            for n, a in zip(self.nodes, alphas)))
+
+
+# --------------------------------------------------------------------------
+# Latency primitives used by the DP partitioners
+# --------------------------------------------------------------------------
+
+def compute_time(flops: float, rate: float) -> float:
+    """Θ for a block on a resource at λ (or Λ) flops/s."""
+    return flops / max(rate, 1e-12)
+
+
+def comm_time(nbytes: float, bw: float, rtt: float = 0.0) -> float:
+    return rtt + nbytes / max(bw, 1e-12)
+
+
+@dataclasses.dataclass(frozen=True)
+class Resource:
+    """Uniform view the DP algorithm sees, at either tier (paper §III:
+    "the function arguments are essentially the same in either case").
+
+    Global tier: one Resource per available node  — rate Λ_j, bw β_j.
+    Local  tier: one Resource per processor ρ_k   — rate λ_k, bw μ_k.
+    """
+
+    name: str
+    rate: float                  # flops/s (already δ- and affinity-adjusted)
+    bw: float                    # bytes/s toward the coordinator
+    rtt: float = 0.0             # fixed per-transfer latency (s)
+    active_power: float = 0.0    # W, for energy accounting
+    idle_power: float = 0.0
+
+    def time_for(self, block_flops: float, xfer_bytes: float) -> float:
+        return compute_time(block_flops, self.rate) + comm_time(
+            xfer_bytes, self.bw, self.rtt)
+
+
+def node_as_resource(node: Node, delta: float = 1.0, kind: str = "generic",
+                     capacity: str = "sum") -> Resource:
+    """Global-tier view: collapse a node to (Λ_j, β_j).
+
+    ``capacity="sum"`` is HiDP's Λ_j = Σλ_k (justified because its local tier
+    actually realises it); ``capacity="default"`` is what global-only
+    strategies measure when profiling the default runtime (P1)."""
+    rate = (node.compute_rate(delta, kind) if capacity == "sum"
+            else node.default_rate(delta, kind))
+    return Resource(
+        name=node.name,
+        rate=rate,
+        bw=node.net_bw,
+        rtt=2e-3,  # wireless round-trip floor; overridden for TPU DCN
+        active_power=sum(p.active_power for p in node.processors),
+        idle_power=sum(p.idle_power for p in node.processors),
+    )
+
+
+def processors_as_resources(node: Node, delta: float = 1.0,
+                            kind: str = "generic") -> tuple[Resource, ...]:
+    """Local-tier view: each ρ_k as (λ_k, μ_k)."""
+    return tuple(
+        Resource(name=f"{node.name}/{p.name}", rate=p.rate(delta, kind),
+                 bw=p.local_bw, rtt=2e-5,
+                 active_power=p.active_power, idle_power=p.idle_power)
+        for p in node.processors)
+
+
+# --------------------------------------------------------------------------
+# TPU production constants (v5e) — used by the roofline and the TPU-guise
+# cost model.  Single source of truth for benchmarks/roofline.py.
+# --------------------------------------------------------------------------
+
+TPU_V5E_PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+TPU_V5E_HBM_BW = 819e9             # bytes/s per chip
+TPU_V5E_ICI_BW = 50e9              # bytes/s per link (~intra-pod)
+TPU_V5E_DCN_BW = 25e9              # bytes/s per pod-pair (inter-pod, approx)
+TPU_V5E_TDP = 215.0                # W per chip (nameplate-ish, for energy est)
+
+
+def tpu_chip(name: str = "v5e") -> Processor:
+    return Processor(name=name, kind="tpu", peak_flops=TPU_V5E_PEAK_FLOPS,
+                     local_bw=TPU_V5E_ICI_BW, idle_power=60.0,
+                     active_power=TPU_V5E_TDP)
+
+
+def tpu_pod(name: str, chips: int = 256) -> Node:
+    return Node(name=name,
+                processors=tuple(
+                    dataclasses.replace(tpu_chip(), name=f"chip{i}")
+                    for i in range(chips)),
+                net_bw=TPU_V5E_DCN_BW)

@@ -1,0 +1,233 @@
+"""The HiDP dynamic-programming partitioner (paper §III, Algorithm 1 lines 4-6
+and 8-10).
+
+The paper uses one DP routine at both tiers ("the function arguments are
+essentially the same in either case including the DNN and the
+computation-communication ratio"):
+
+* **model partitioning** — choose cut points turning the block chain into
+  contiguous *stages* of heterogeneous width ω, each assigned to one resource;
+  the request flows stage → stage, paying an activation transfer at every cut.
+  ``Θ_ω = γ·ω`` with γ = Ψ (global) or ψ (local)  — Eq. 5.
+
+* **data partitioning** — choose σ parallel sub-models and per-resource data
+  fractions; all resources run concurrently and the slowest finishes last.
+  ``Θ_σ = γ·σ``  — Eq. 6.
+
+* **mode selection** — ``Θ = min(Θ_ω, Θ_σ)``  (Alg. 1 line 6 / 10).
+
+The model-partitioning search is an exact DP over (prefix of blocks ×
+resources-used):  DP[i][j] = best latency executing blocks[:i] on the first j
+resources of a heterogeneity-ordered list.  The paper describes this as a
+subset-sum-style O(n·m) recursion seeded "with the largest possible block
+sizes following the resource heterogeneity" and back-propagating block by
+block; we implement the exact O(n²·m) variant (n = #blocks is small: ≤ ~200)
+and keep the paper's heterogeneity-descending resource order, which makes the
+greedy seed the DP's first feasible path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from .cost_model import Resource, comm_time, compute_time
+from .dag import DataPartition, ModelDAG, ModelPartition, Partition
+
+
+# --------------------------------------------------------------------------
+# Model partitioning (pipeline over stages of width ω)
+# --------------------------------------------------------------------------
+
+def partition_model(dag: ModelDAG, resources: Sequence[Resource],
+                    *, weight_transfer: bool = False) -> ModelPartition:
+    """Exact DP for heterogeneous contiguous pipeline partitioning.
+
+    Latency objective (single request, sequential stage execution — the
+    paper's "inherently temporal" model partitioning):
+
+        T = Σ_stages [ xfer_in(stage) + compute(stage) ]  + xfer_out(last)
+
+    Resources are ordered by descending rate ("following the resource
+    heterogeneity"); the DP may leave later (slower) resources unused, so the
+    result uses between 1 and m stages with variable block widths.
+
+    ``weight_transfer``: when True, shipping a stage to a non-leader resource
+    also pays its ``param_bytes`` over that resource's link (cold start —
+    used by the simulator's first-request path; steady-state serving keeps
+    weights resident, the paper's implicit assumption).
+    """
+    n = len(dag.blocks)
+    if n == 0:
+        raise ValueError("empty DAG")
+    order = sorted(range(len(resources)), key=lambda i: -resources[i].rate)
+    res = [resources[i] for i in order]
+    m = len(res)
+
+    # Prefix sums for O(1) segment cost.
+    cum_flops = dag.cumulative_flops()
+    cum_params = [0.0]
+    for b in dag.blocks:
+        cum_params.append(cum_params[-1] + b.param_bytes)
+
+    def seg_flops(a: int, b: int) -> float:
+        return cum_flops[b] - cum_flops[a]
+
+    def seg_params(a: int, b: int) -> float:
+        return cum_params[b] - cum_params[a]
+
+    INF = float("inf")
+    # dp[j][i]: best latency for blocks[:i] using a subset of the first j
+    # resources where resource j-1 runs the last stage ending at i.
+    # best[j][i]: min over j'<=j of dp, i.e. blocks[:i] done within first j res.
+    dp = [[INF] * (n + 1) for _ in range(m + 1)]
+    best = [[INF] * (n + 1) for _ in range(m + 1)]
+    parent: dict[tuple[int, int], tuple[int, int]] = {}
+    for j in range(m + 1):
+        dp[j][0] = 0.0
+        best[j][0] = 0.0
+
+    for j in range(1, m + 1):
+        r = res[j - 1]
+        for i in range(1, n + 1):
+            for s in range(i):
+                prev = best[j - 1][s]
+                if prev == INF:
+                    continue
+                xfer = dag.blocks[s].bytes_in if s > 0 else dag.input_bytes
+                cost = (prev
+                        + comm_time(xfer, r.bw, r.rtt)
+                        + compute_time(seg_flops(s, i), r.rate))
+                if weight_transfer and j > 1:
+                    cost += comm_time(seg_params(s, i), r.bw)
+                if cost < dp[j][i]:
+                    dp[j][i] = cost
+                    parent[(j, i)] = (j - 1, s)
+            best[j][i] = min(best[j - 1][i], dp[j][i])
+
+    # Final answer: best over how many resources considered; add result return.
+    end_j, end_cost = 0, INF
+    for j in range(1, m + 1):
+        if dp[j][n] < INF:
+            c = dp[j][n] + comm_time(dag.output_bytes, res[j - 1].bw,
+                                     res[j - 1].rtt)
+            if c < end_cost:
+                end_cost, end_j = c, j
+    if end_cost == INF:
+        raise RuntimeError("model-partition DP found no feasible plan")
+
+    # Back-propagate block by block (paper's phrasing) to recover cuts.
+    cuts: list[int] = [n]
+    assign: list[int] = []
+    j, i = end_j, n
+    while i > 0:
+        # Walk down to the j whose dp achieved best[j][i] on this path.
+        while j > 0 and (j, i) not in parent:
+            j -= 1
+        pj, s = parent[(j, i)]
+        assign.append(order[j - 1])
+        cuts.append(s)
+        j, i = pj, s
+    cuts.reverse()
+    assign.reverse()
+    return ModelPartition(boundaries=tuple(cuts), assignment=tuple(assign),
+                          predicted_latency=end_cost)
+
+
+# --------------------------------------------------------------------------
+# Data partitioning (σ parallel sub-models)
+# --------------------------------------------------------------------------
+
+def _balanced_fractions(dag: ModelDAG, subset: Sequence[Resource]
+                        ) -> tuple[tuple[float, ...], float]:
+    """Water-fill data fractions so every resource finishes simultaneously.
+
+    Per-resource time for fraction f:  t_i = f·(F/r_i + B_io/bw_i) + rtt_i
+    Setting t_i = t for all i and Σf = 1 gives a closed form.
+    """
+    F = dag.total_flops
+    # bytes shipped per unit fraction: the input split + merged output + the
+    # halo exchange along the deepest halo block.
+    halo = max((b.bytes_out * b.halo_fraction for b in dag.blocks), default=0.0)
+    bio = dag.input_bytes + dag.output_bytes + 2.0 * halo
+    k = [F / r.rate + bio / r.bw for r in subset]          # seconds per unit f
+    c = [r.rtt for r in subset]
+    # t = (1 + Σ c_i/k_i) / Σ (1/k_i); f_i = (t - c_i)/k_i
+    inv = sum(1.0 / ki for ki in k)
+    t = (1.0 + sum(ci / ki for ci, ki in zip(c, k))) / inv
+    fr = [(t - ci) / ki for ci, ki in zip(c, k)]
+    if any(f <= 0 for f in fr):           # a resource too slow to help
+        return tuple(), float("inf")
+    s = sum(fr)
+    return tuple(f / s for f in fr), t
+
+
+def partition_data(dag: ModelDAG, resources: Sequence[Resource]
+                   ) -> DataPartition:
+    """Explore σ = 1..m sub-models over heterogeneity-ordered resources and
+    keep the fastest balanced split (Eq. 6).  Blocks that are not
+    data-splittable force σ = 1 (feasibility mask — e.g. recurrent decode
+    state, see DESIGN.md §4)."""
+    order = sorted(range(len(resources)), key=lambda i: -resources[i].rate)
+    if not all(b.data_splittable for b in dag.blocks):
+        order = order[:1]
+    best: DataPartition | None = None
+    for sigma in range(1, len(order) + 1):
+        subset_idx = order[:sigma]
+        subset = [resources[i] for i in subset_idx]
+        fr, t = _balanced_fractions(dag, subset)
+        if not fr:
+            continue
+        if best is None or t < best.predicted_latency:
+            best = DataPartition(fractions=fr, assignment=tuple(subset_idx),
+                                 predicted_latency=t)
+    if best is None:
+        raise RuntimeError("data-partition search found no feasible plan")
+    return best
+
+
+# --------------------------------------------------------------------------
+# Mode selection — Algorithm 1 lines 4-6 / 8-10
+# --------------------------------------------------------------------------
+
+def partition(dag: ModelDAG, resources: Sequence[Resource],
+              *, weight_transfer: bool = False) -> Partition:
+    """Θ ← min(Θ_ω, Θ_σ): run both searches, return the faster plan."""
+    theta_w = partition_model(dag, resources, weight_transfer=weight_transfer)
+    theta_s = partition_data(dag, resources)
+    if theta_w.predicted_latency <= theta_s.predicted_latency:
+        return theta_w
+    return theta_s
+
+
+# --------------------------------------------------------------------------
+# Energy prediction for a plan (used by the simulator and benchmarks)
+# --------------------------------------------------------------------------
+
+def predicted_energy(dag: ModelDAG, resources: Sequence[Resource],
+                     plan: Partition) -> float:
+    """∫P dt with active power while a resource computes/communicates and idle
+    power for the rest of the plan's makespan."""
+    T = plan.predicted_latency
+    if isinstance(plan, ModelPartition):
+        busy = {}
+        for si in range(plan.num_stages):
+            a, b = plan.boundaries[si], plan.boundaries[si + 1]
+            r = resources[plan.assignment[si]]
+            seg = dag.segment(a, b)
+            busy[plan.assignment[si]] = busy.get(plan.assignment[si], 0.0) + (
+                compute_time(seg.flops, r.rate)
+                + comm_time(seg.bytes_in, r.bw, r.rtt))
+    else:
+        busy = {}
+        for f, ri in zip(plan.fractions, plan.assignment):
+            r = resources[ri]
+            busy[ri] = (compute_time(dag.total_flops * f, r.rate)
+                        + comm_time((dag.input_bytes + dag.output_bytes) * f,
+                                    r.bw, r.rtt))
+    e = 0.0
+    for i, r in enumerate(resources):
+        b = min(busy.get(i, 0.0), T)
+        e += r.active_power * b + r.idle_power * max(T - b, 0.0)
+    return e

@@ -1,0 +1,69 @@
+"""Tier-1 (global) partitioner — Algorithm 1 lines 3-7.
+
+The leader node collapses every *available* node to a Resource (Λ_j, β_j),
+consults the DSE agent (the DP search in ``dp_partitioner``) for both modes,
+and picks Θ = min(Θ_ω, Θ_σ).  The output maps sub-workloads to nodes; the
+sub-workload that lands on a node is then re-partitioned locally (tier 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .cost_model import Cluster, Node, Resource, node_as_resource
+from .dag import DataPartition, ModelDAG, ModelPartition, Partition
+from . import dp_partitioner
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalAssignment:
+    """One node's share of the request after global partitioning."""
+
+    node: Node
+    # Model mode: the contiguous block range this node executes.
+    block_range: tuple[int, int] | None = None
+    # Data mode: the fraction of the request's data this node executes.
+    fraction: float | None = None
+    # Position in the pipeline (model mode) for ordering transfers.
+    stage_index: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalPlan:
+    mode: str                            # "model" | "data"
+    partition: Partition
+    assignments: tuple[GlobalAssignment, ...]
+    predicted_latency: float
+    predicted_energy: float
+
+
+def plan_global(dag: ModelDAG, cluster: Cluster, *, delta: float = 1.0,
+                weight_transfer: bool = False,
+                capacity: str = "sum") -> GlobalPlan:
+    nodes = cluster.available_nodes()
+    if not nodes:
+        raise RuntimeError("no available nodes in cluster (A(N_φ) all-zero)")
+    resources = [node_as_resource(n, delta, capacity=capacity) for n in nodes]
+    plan = dp_partitioner.partition(dag, resources,
+                                    weight_transfer=weight_transfer)
+    energy = dp_partitioner.predicted_energy(dag, resources, plan)
+
+    assignments: list[GlobalAssignment] = []
+    if isinstance(plan, ModelPartition):
+        for si in range(plan.num_stages):
+            a, b = plan.boundaries[si], plan.boundaries[si + 1]
+            assignments.append(GlobalAssignment(
+                node=nodes[plan.assignment[si]], block_range=(a, b),
+                stage_index=si))
+        mode = "model"
+    else:
+        assert isinstance(plan, DataPartition)
+        for si, (f, ri) in enumerate(zip(plan.fractions, plan.assignment)):
+            assignments.append(GlobalAssignment(
+                node=nodes[ri], fraction=f, stage_index=si))
+        mode = "data"
+    return GlobalPlan(mode=mode, partition=plan,
+                      assignments=tuple(assignments),
+                      predicted_latency=plan.predicted_latency,
+                      predicted_energy=energy)

@@ -1,0 +1,73 @@
+"""Tier-2 (local) partitioner — Algorithm 1 lines 8-10.
+
+Each node re-partitions its assigned sub-workload across its own processors
+ρ_k using the *same* DP search, now driven by the local ratio vector
+ψ = {λ_k/μ_k}.  This is the tier that the SoA strategies lack (Table I) and
+the source of the "P1 is never optimal" observation of Fig. 1: on a Jetson,
+running a whole block on the GPU alone loses to a tuned CPU+GPU split.
+
+Block-kind affinity makes the split heterogeneity-aware: λ_k is modulated per
+block kind (conv/attn/moe/ssm/...), the paper's "CPU-friendly layers" effect.
+In the TPU guise, processors are sharding lanes and affinity encodes
+per-(block-kind × axis) sharding efficiency (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .cost_model import Node, Resource, processors_as_resources
+from .dag import DataPartition, ModelDAG, ModelPartition, Partition
+from . import dp_partitioner
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalPlan:
+    node_name: str
+    mode: str                        # "model" | "data"
+    partition: Partition
+    predicted_latency: float
+    predicted_energy: float
+
+
+def dominant_kind(dag: ModelDAG) -> str:
+    """The block kind carrying the most FLOPs — used to pick the affinity row
+    when collapsing a sub-workload to a single scalar rate."""
+    flops_by_kind: dict[str, float] = {}
+    for b in dag.blocks:
+        flops_by_kind[b.kind] = flops_by_kind.get(b.kind, 0.0) + b.flops
+    return max(flops_by_kind, key=flops_by_kind.get) if flops_by_kind else "generic"
+
+
+def plan_local(sub_dag: ModelDAG, node: Node, *, delta: float = 1.0) -> LocalPlan:
+    kind = dominant_kind(sub_dag)
+    resources = processors_as_resources(node, delta, kind)
+    plan = dp_partitioner.partition(sub_dag, resources)
+    energy = dp_partitioner.predicted_energy(sub_dag, resources, plan)
+    mode = "model" if isinstance(plan, ModelPartition) else "data"
+    return LocalPlan(node_name=node.name, mode=mode, partition=plan,
+                     predicted_latency=plan.predicted_latency,
+                     predicted_energy=energy)
+
+
+def p1_plan(sub_dag: ModelDAG, node: Node, *, delta: float = 1.0,
+            processor_kind: str | None = None) -> LocalPlan:
+    """The SoA default (Fig. 1 config "P1"): run the whole block on a single
+    processor — the framework-default device — with no local partitioning.
+    Used by the MoDNN/OmniBoost/DisNet baselines and the Fig. 1 benchmark."""
+    resources = processors_as_resources(node, delta, dominant_kind(sub_dag))
+    # Prefer the requested processor kind; fall back to the fastest.
+    if processor_kind is None:
+        processor_kind = node.default_processor
+    idx = next((i for i, p in enumerate(node.processors)
+                if p.kind == processor_kind), None)
+    if idx is None:
+        idx = max(range(len(resources)), key=lambda i: resources[i].rate)
+    r = resources[idx]
+    lat = r.time_for(sub_dag.total_flops, sub_dag.input_bytes
+                     + sub_dag.output_bytes)
+    plan = DataPartition(fractions=(1.0,), assignment=(idx,),
+                         predicted_latency=lat)
+    energy = dp_partitioner.predicted_energy(sub_dag, resources, plan)
+    return LocalPlan(node_name=node.name, mode="data", partition=plan,
+                     predicted_latency=lat, predicted_energy=energy)

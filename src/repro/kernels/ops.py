@@ -1,0 +1,96 @@
+"""Jit'd dispatch wrappers around the kernels.
+
+``set_backend()`` / the ``REPRO_KERNEL_BACKEND`` env var select the lowering:
+
+  * ``pallas``   — the Pallas TPU kernels (``interpret=True`` automatically on
+                   CPU so tests can run anywhere).
+  * ``blocked``  — pure-jnp flash/chunked algorithms (ref.py).  Default for
+                   dry-runs: same memory profile as the kernels, lowers on any
+                   backend, keeps HLO clean for cost analysis.
+  * ``naive``    — full-materialisation oracles (tiny shapes/tests only).
+
+Models call only these entry points, so the backend choice is a launcher
+concern (the TPU launcher sets ``pallas``; dry-run and CI set ``blocked``).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Literal
+
+import jax
+
+from . import ref
+
+Backend = Literal["pallas", "blocked", "naive"]
+_BACKEND: Backend = os.environ.get("REPRO_KERNEL_BACKEND", "blocked")  # type: ignore
+
+
+def set_backend(backend: Backend) -> None:
+    global _BACKEND
+    if backend not in ("pallas", "blocked", "naive"):
+        raise ValueError(backend)
+    _BACKEND = backend
+
+
+def get_backend() -> Backend:
+    return _BACKEND
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# --------------------------------------------------------------------------
+# Attention (prefill / training)
+# --------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    lengths=None, block_q=512, block_k=512):
+    if _BACKEND == "naive":
+        return ref.attention_naive(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, lengths=lengths)
+    if _BACKEND == "pallas":
+        from . import flash_attention as fa
+        return fa.flash_attention(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset, lengths=lengths,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=not _on_tpu())
+    return ref.attention_blocked(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, lengths=lengths,
+                                 block_q=block_q, block_k=block_k)
+
+
+# --------------------------------------------------------------------------
+# Decode attention (one token vs. KV cache)
+# --------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window=None,
+                     block_k=1024):
+    if _BACKEND == "pallas":
+        from . import decode_attention as da
+        return da.decode_attention(q, k_cache, v_cache, lengths,
+                                   window=window, block_k=block_k,
+                                   interpret=not _on_tpu())
+    return ref.decode_attention_naive(q, k_cache, v_cache, lengths,
+                                      window=window)
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 SSD
+# --------------------------------------------------------------------------
+
+def ssd(x, dt, A, B, C, D, *, chunk=128, h0=None):
+    """Chunked SSD scan (prefill/training)."""
+    if _BACKEND == "naive":
+        return ref.ssd_naive(x, dt, A, B, C, D, h0=h0)
+    if _BACKEND == "pallas":
+        from . import ssd_scan
+        return ssd_scan.ssd(x, dt, A, B, C, D, chunk=chunk, h0=h0,
+                            interpret=not _on_tpu())
+    return ref.ssd_chunked(x, dt, A, B, C, D, chunk=chunk, h0=h0)
+
+
+def ssd_decode_step(h, x, dt, A, B, C, D):
+    return ref.ssd_decode_step(h, x, dt, A, B, C, D)

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk pass.
+
+The SSD algorithm splits into (a) a quadratic attention-like pass inside each
+chunk and (b) a linear recurrence across chunk states.  (a) carries ~all the
+FLOPs and maps onto the MXU; (b) is a tiny (nh, hd, n) scan that stays in
+plain XLA (ops wrapper) — forcing it into the kernel would serialise the
+grid for no compute win.  This split is the TPU adaptation of the fused GPU
+kernel in the Mamba-2 release (DESIGN.md §2).
+
+Kernel, per (batch, chunk) grid cell — all heads processed together so the
+(c, n) B/C panels are loaded once per chunk:
+
+  scores = C · Bᵀ                (c×c, MXU)
+  L      = exp(segsum(dA))       per head (nh, c, c)
+  y_diag = (scores ⊙ L_h) · x̄_h  batched over heads (MXU)
+  states = (B ⊙ decay)ᵀ · x̄_h    per-chunk outgoing state (nh, n, hd)
+
+VMEM at c=128, nh=48, hd=64, n=128: x̄ 1.5 MB + L 3.1 MB + panels < 6 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xdt_ref, dacs_ref, b_ref, c_ref,
+            ydiag_ref, states_ref,
+            *, nh: int, hd: int, n: int, chunk: int):
+    xdt = xdt_ref[0, 0].astype(jnp.float32)          # (c, nh*hd)
+    dacs = dacs_ref[0, 0].astype(jnp.float32)        # (c, nh) cumsum log-decay
+    B = b_ref[0, 0].astype(jnp.float32)              # (c, n)
+    C = c_ref[0, 0].astype(jnp.float32)              # (c, n)
+
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))  # (c,c)
+    # L[h,i,j] = exp(dacs[i,h] - dacs[j,h]) masked to j<=i
+    di = dacs.T[:, :, None]                          # (nh, c, 1)
+    dj = dacs.T[:, None, :]                          # (nh, 1, c)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tril = (jj <= ii)[None]
+    L = jnp.where(tril, jnp.exp(di - dj), 0.0)       # (nh, c, c)
+    w = scores[None] * L                             # (nh, c, c)
+    xh = xdt.reshape(chunk, nh, hd).transpose(1, 0, 2)   # (nh, c, hd)
+    y = jax.lax.dot_general(w, xh, (((2,), (1,)), ((0,), (0,))))  # (nh,c,hd)
+    ydiag_ref[0, 0] = y.transpose(1, 0, 2).reshape(
+        chunk, nh * hd).astype(ydiag_ref.dtype)
+
+    # outgoing chunk state: states[h] = Σ_j exp(dacs[-1,h]-dacs[j,h]) B_j x̄_jh
+    decay = jnp.exp(dacs[-1][None, :] - dacs)        # (c, nh)
+    bd = B[:, None, :] * decay[:, :, None]           # (c, nh, n)
+    bd = bd.transpose(1, 2, 0)                       # (nh, n, c)
+    st = jax.lax.dot_general(bd, xh, (((2,), (1,)), ((0,), (0,))))  # (nh,n,hd)
+    states_ref[0, 0] = st.astype(states_ref.dtype)
+
+
+def ssd_intra_chunk(xdt: jax.Array, dacs: jax.Array, B: jax.Array,
+                    C: jax.Array, *, nh: int, hd: int,
+                    interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """xdt: (b, nc, c, nh*hd)  dacs: (b, nc, c, nh)  B/C: (b, nc, c, n).
+    Returns (y_diag (b, nc, c, nh*hd), states (b, nc, nh, n, hd))."""
+    b, nc, c, _ = xdt.shape
+    n = B.shape[-1]
+    kernel = functools.partial(_kernel, nh=nh, hd=hd, n=n, chunk=c)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, nh * hd), lambda b, z: (b, z, 0, 0)),
+            pl.BlockSpec((1, 1, c, nh), lambda b, z: (b, z, 0, 0)),
+            pl.BlockSpec((1, 1, c, n), lambda b, z: (b, z, 0, 0)),
+            pl.BlockSpec((1, 1, c, n), lambda b, z: (b, z, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, nh * hd), lambda b, z: (b, z, 0, 0)),
+            pl.BlockSpec((1, 1, nh, n, hd), lambda b, z: (b, z, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, c, nh * hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, nh, n, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xdt, dacs, B, C)
+    return y, st
+
+
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+        C: jax.Array, D: jax.Array, *, chunk: int = 128,
+        h0: jax.Array | None = None,
+        interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Drop-in replacement for ref.ssd_chunked with the quadratic pass in
+    Pallas.  Shapes as in ref.py."""
+    b, t, nh, hd = x.shape
+    n = B.shape[-1]
+    c = min(chunk, t)
+    nc = -(-t // c)
+    pad = nc * c - t
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    xf = x.astype(jnp.float32).reshape(b, nc, c, nh, hd)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, c, nh)
+    Bf = B.astype(jnp.float32).reshape(b, nc, c, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, c, n)
+    dA = dtf * A[None, None, None, :]
+    dA_cs = jnp.cumsum(dA, axis=2)
+    xdt = (xf * dtf[..., None]).reshape(b, nc, c, nh * hd)
+
+    y_diag, states = ssd_intra_chunk(xdt, dA_cs, Bf, Cf, nh=nh, hd=hd,
+                                     interpret=interpret)
+    states = states.transpose(0, 1, 2, 4, 3)          # (b, nc, nh, hd, n)
+
+    # inter-chunk recurrence (tiny, stays in XLA)
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, n), jnp.float32)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])         # (b, nc, nh)
+
+    def step(h, inp):
+        st, dec = inp
+        return h * dec[..., None, None] + st, h
+    h_final, h_in = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_in = h_in.swapaxes(0, 1)                        # (b, nc, nh, hd, n)
+
+    in_decay = jnp.exp(dA_cs)                         # (b, nc, c, nh)
+    y_off = jnp.einsum("bzcn,bzch,bzhpn->bzchp", Cf, in_decay, h_in)
+    y = y_diag.reshape(b, nc, c, nh, hd) + y_off
+    y = y.reshape(b, nc * c, nh, hd)[:, :t]
+    y = y + x.astype(jnp.float32)[:, :t] * D[None, None, :, None]
+    return y.astype(x.dtype), h_final

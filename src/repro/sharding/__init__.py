@@ -1,0 +1,3 @@
+# Keep this package import-light: models import repro.sharding.ctx, and
+# plan.py imports the models package — a heavy __init__ here would be a cycle.
+from . import ctx  # noqa: F401

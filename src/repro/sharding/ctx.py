@@ -1,0 +1,71 @@
+"""Activation-sharding context.
+
+XLA's sharding propagation cannot always infer the intended layout of
+intermediate activations through scan-over-layers and the CE loss (it
+replicates on conflict, which at 1M tokens × 256k vocab is catastrophic).
+The launcher publishes the HiDP plan's activation/logits PartitionSpecs here
+and the model code pins them with ``with_sharding_constraint`` at layer
+boundaries — a no-op when no plan is active (CPU smoke tests) or when
+tracing without a mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACT_SPEC: P | None = None          # (batch, seq, d)
+_LOGITS_SPEC: P | None = None       # (batch, seq, vocab)
+_MESH = None                        # concrete Mesh for shard_map paths
+_EP_AXIS: str | tuple | None = None  # expert-parallel mesh axis
+_ACT_SHARD_SPEC: P | None = None    # per-device activation blocks for EP
+
+
+def set_specs(act: P | None, logits: P | None, mesh=None,
+              ep_axis=None) -> None:
+    global _ACT_SPEC, _LOGITS_SPEC, _MESH, _EP_AXIS
+    _ACT_SPEC, _LOGITS_SPEC = act, logits
+    _MESH, _EP_AXIS = mesh, ep_axis
+
+
+@contextlib.contextmanager
+def plan_specs(act: P | None, logits: P | None, mesh=None, ep_axis=None):
+    prev = (_ACT_SPEC, _LOGITS_SPEC, _MESH, _EP_AXIS)
+    set_specs(act, logits, mesh, ep_axis)
+    try:
+        yield
+    finally:
+        set_specs(*prev)
+
+
+def get_mesh():
+    return _MESH
+
+
+def get_ep_axis():
+    return _EP_AXIS
+
+
+def get_act_spec() -> P | None:
+    return _ACT_SPEC
+
+
+def _constrain(x: jax.Array, spec: P | None) -> jax.Array:
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x                      # no mesh in scope (unit tests)
+
+
+def constrain_act(x: jax.Array) -> jax.Array:
+    """Pin a (B, T, d) activation to the plan's layout."""
+    return _constrain(x, _ACT_SPEC)
+
+
+def constrain_logits(x: jax.Array) -> jax.Array:
+    return _constrain(x, _LOGITS_SPEC)

@@ -1,0 +1,216 @@
+"""Render a HiDP ShardingPlan into concrete jax.sharding.NamedSharding trees
+for parameters, optimizer state, batches and caches.
+
+Rules are name-based on the trailing dims of each leaf (stack dims — layer,
+group, expert-group — are padded with None on the left), so the same table
+serves the flat decoder stack, whisper's enc/dec stacks and the VLM's
+two-level stack.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .plan import ShardingPlan
+
+
+def _ax(axes: tuple[str, ...]):
+    """() → None; (a,) → a; (a,b) → (a,b) for PartitionSpec entries."""
+    if not axes:
+        return None
+    if len(axes) == 1:
+        return axes[0]
+    return tuple(axes)
+
+
+# trailing-dims spec table: name → function(plan) -> tuple of entries
+def _param_rules(plan: ShardingPlan) -> dict[str, tuple]:
+    tp = _ax(plan.tp_axes)
+    fs = _ax(plan.fsdp_axes)
+    return {
+        # embeddings
+        "embedding": (tp, fs),
+        "head": (fs, tp),
+        # attention
+        "wq": (fs, tp), "wk": (fs, tp), "wv": (fs, tp), "wo": (tp, fs),
+        # dense mlp
+        "w_gate": (fs, tp), "w_up": (fs, tp), "w_down": (tp, fs),
+        # moe (experts sharded over tp = expert parallelism; the dense
+        # fallback also benefits: each chip computes only its expert shard).
+        # _moe_rules() overrides these when E does not divide the tp axes.
+        "router": (fs, None),
+        "moe/w_gate": (tp, fs, None), "moe/w_up": (tp, fs, None),
+        "moe/w_down": (tp, None, fs),
+        # mamba
+        "w_in": (fs, tp), "w_out": (tp, fs), "conv": (None, tp),
+        "A_log": (tp,), "D": (tp,), "dt_bias": (tp,), "norm": (tp,),
+        # norms / gates
+        "w": (None,), "b": (None,),
+        "gate_attn": (), "gate_mlp": (),
+        "ln1": (None,), "ln2": (None,), "lnx": (None,),
+    }
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            out.append(k.name)
+    return out
+
+
+def param_pspec(path, leaf, plan: ShardingPlan) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    rules = _param_rules(plan)
+    moe_ctx = any(n == "moe" for n in names)
+    key = f"moe/{name}" if moe_ctx and f"moe/{name}" in rules else name
+    ndim = len(leaf.shape)
+    if key not in rules:
+        return P()                                  # replicate unknowns
+    if moe_ctx and key.startswith("moe/"):
+        # expert count may not divide the tp axes (mixtral: 8e over a
+        # 16-wide axis) — shard the expert-FF dim instead so the 90 GB of
+        # expert weights never replicate
+        n_experts = leaf.shape[-3]
+        tp_size = 1
+        for a in plan.tp_axes:
+            tp_size *= plan.mesh.size(a)
+        if n_experts % max(tp_size, 1) != 0:
+            tp = _ax(plan.tp_axes)
+            fs = _ax(plan.fsdp_axes)
+            rules = dict(rules)
+            rules["moe/w_gate"] = (None, fs, tp)
+            rules["moe/w_up"] = (None, fs, tp)
+            rules["moe/w_down"] = (None, tp, fs)
+    tail = rules[key]
+    tail = tail[:ndim]
+    pad = ndim - len(tail)
+    return P(*([None] * pad + list(tail)))
+
+
+def sanitize(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """pjit in_shardings require every sharded dim to divide evenly; drop
+    axes (largest-first) from entries that do not divide."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, entries):
+        if e is None:
+            out.append(None)
+            continue
+        axes = list(e) if isinstance(e, tuple) else [e]
+        while axes:
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            if dim % total == 0:
+                break
+            axes.sort(key=lambda a: sizes[a])
+            axes.pop()                       # drop the largest axis
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def param_shardings(mesh: Mesh, specs_tree: Any, plan: ShardingPlan) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, sanitize(mesh, param_pspec(path, leaf, plan), leaf.shape)),
+        specs_tree)
+
+
+# --------------------------------------------------------------------------
+# Batches
+# --------------------------------------------------------------------------
+
+def batch_pspec(name: str, leaf, plan: ShardingPlan) -> P:
+    b = _ax(plan.batch_axes)
+    s = _ax(plan.seq_axes)
+    ndim = len(leaf.shape)
+    if name in ("tokens", "targets"):
+        return P(b, s) if ndim == 2 else P(b)
+    if name == "lengths":
+        return P(b)
+    if name == "frames":            # (B, T_enc, d)
+        return P(b, s, None)
+    if name == "vision":            # (B, Nv, d)
+        return P(b, None, None)
+    return P()
+
+
+def batch_shardings(mesh: Mesh, batch_tree: dict, plan: ShardingPlan) -> dict:
+    return {k: NamedSharding(mesh, sanitize(mesh, batch_pspec(k, v, plan),
+                                            v.shape))
+            for k, v in batch_tree.items()}
+
+
+# --------------------------------------------------------------------------
+# Caches
+# --------------------------------------------------------------------------
+
+def cache_pspec(path, leaf, plan: ShardingPlan) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    b = _ax(plan.batch_axes)
+    s = _ax(plan.seq_axes)
+    tp = _ax(plan.tp_axes)
+    ndim = len(leaf.shape)
+    if name in ("k", "v"):          # (..., B, S, Hkv, hd)
+        # KV-head counts often do not divide the tp axes (GQA kv ∈ {1,4,5,8}
+        # vs 16-way model axis); those axes shard the cache *sequence* dim
+        # instead (context parallelism) — without this the cache replicates.
+        hkv = leaf.shape[-2]
+        head_axes, seq_extra = [], list(plan.seq_axes)
+        acc = 1
+        for a in plan.tp_axes:
+            size = plan.mesh.size(a)
+            if hkv % (acc * size) == 0:
+                head_axes.append(a)
+                acc *= size
+            else:
+                seq_extra.append(a)
+        tail = (b, _ax(tuple(seq_extra)), _ax(tuple(head_axes)), None)
+    elif name in ("xk", "xv"):      # (..., B, Nv, Hkv, hd)
+        tail = (b, None, tp, None)
+    elif name == "h":               # (..., B, nh, hd, n)
+        tail = (b, tp, None, None)
+    elif name == "conv":            # (..., B, cw-1, C)
+        tail = (b, None, tp)
+    else:
+        return P()
+    tail = tail[-ndim:] if len(tail) > ndim else tail
+    pad = ndim - len(tail)
+    return P(*([None] * pad + list(tail)))
+
+
+def cache_shardings(mesh: Mesh, cache_tree: Any, plan: ShardingPlan) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, sanitize(mesh, cache_pspec(path, leaf, plan), leaf.shape)),
+        cache_tree)
+
+
+# --------------------------------------------------------------------------
+# Outputs
+# --------------------------------------------------------------------------
+
+def logits_sharding(mesh: Mesh, plan: ShardingPlan,
+                    shape: tuple[int, ...] | None = None) -> NamedSharding:
+    spec = P(_ax(plan.batch_axes), None, _ax(plan.tp_axes))
+    if shape is not None:
+        spec = sanitize(mesh, spec, shape)
+    return NamedSharding(mesh, spec)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

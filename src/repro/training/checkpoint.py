@@ -1,0 +1,81 @@
+"""Checkpointing: msgpack-serialised pytrees with atomic rename, step
+tagging, and resume — the fault-tolerance substrate (restart after node
+failure re-enters the run at the last durable step).
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(x)
+    # msgpack has no bf16: view as uint16 and tag the true dtype
+    tag = str(x.dtype) if hasattr(x, "dtype") else str(arr.dtype)
+    if tag == "bfloat16":
+        arr = arr.view(np.uint16)
+    return {"dtype": tag, "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _unpack_leaf(d: dict):
+    dtype = d["dtype"]
+    if dtype == "bfloat16":
+        arr = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return jnp.asarray(arr).view(jnp.bfloat16)
+    arr = np.frombuffer(d["data"], np.dtype(dtype)).reshape(d["shape"])
+    return jnp.asarray(arr)
+
+
+def save(path: str, tree: Any, step: int) -> str:
+    """Atomic write of {step, tree} → ``path`` (tmp + rename)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {"step": step,
+               "leaves": [_pack_leaf(l) for l in leaves]}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)           # atomic on POSIX
+    return path
+
+
+def restore(path: str, like: Any) -> tuple[Any, int]:
+    """Restore into the structure of ``like``.  Returns (tree, step)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree.flatten(like)
+    restored = [_unpack_leaf(d) for d in payload["leaves"]]
+    if len(restored) != len(leaves):
+        raise ValueError(f"checkpoint has {len(restored)} leaves, "
+                         f"expected {len(leaves)}")
+    return jax.tree.unflatten(treedef, restored), payload["step"]
+
+
+def latest(directory: str, prefix: str = "ckpt_") -> str | None:
+    """Most recent step-tagged checkpoint in a directory."""
+    if not os.path.isdir(directory):
+        return None
+    best, best_step = None, -1
+    for name in os.listdir(directory):
+        if name.startswith(prefix) and name.endswith(".msgpack"):
+            try:
+                step = int(name[len(prefix):-len(".msgpack")])
+            except ValueError:
+                continue
+            if step > best_step:
+                best, best_step = os.path.join(directory, name), step
+    return best
+
+
+def step_path(directory: str, step: int, prefix: str = "ckpt_") -> str:
+    os.makedirs(directory, exist_ok=True)
+    return os.path.join(directory, f"{prefix}{step:08d}.msgpack")

@@ -1,0 +1,125 @@
+"""AdamW with cosine / WSD schedules — pure-JAX, sharding-transparent
+(optimizer state mirrors parameter sharding leaf-for-leaf).
+
+WSD (warmup-stable-decay) is the MiniCPM schedule; configs mark themselves
+via ``LR_SCHEDULE = "wsd"`` (configs/minicpm_2b.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"          # "cosine" | "wsd" | "constant"
+    decay_fraction: float = 0.1       # WSD: last 10% of steps decay
+    state_dtype: str = "float32"      # "float32" | "bfloat16" (memory-bound)
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    # fp32 master copies when params are stored bf16 (halves gradient /
+    # fsdp collective bytes; the optimizer updates the master and writes
+    # back a bf16 cast)
+    master: Any = None
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    if cfg.schedule == "wsd":
+        decay_start = cfg.total_steps * (1.0 - cfg.decay_fraction)
+        frac = jnp.clip((step - decay_start)
+                        / jnp.maximum(cfg.total_steps - decay_start, 1),
+                        0.0, 1.0)
+        # exponential-style decay to 10% as in MiniCPM
+        return cfg.lr * warm * jnp.where(step < decay_start, 1.0,
+                                         0.1 ** frac)
+    # cosine
+    prog = jnp.clip(step / jnp.maximum(cfg.total_steps, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def init(params: Any, state_dtype=jnp.float32,
+         master: bool = False) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params)
+    mw = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+          if master else None)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros), master=mw)
+
+
+def init_abstract(param_specs: Any, state_dtype=jnp.float32,
+                  master: bool = False) -> OptState:
+    z = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, state_dtype),
+                     param_specs)
+    mw = (jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                       param_specs) if master else None)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32), m=z, v=z,
+                    master=mw)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(cfg: OptConfig, params: Any, grads: Any,
+                  state: OptState) -> tuple[Any, OptState, dict]:
+    """One AdamW step with global-norm clipping.  Returns (params, state,
+    metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    sd = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+
+    def upd(p, g, m, v, mw):
+        m = (cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g).astype(sd)
+        v = (cfg.b2 * v.astype(jnp.float32)
+             + (1 - cfg.b2) * g * g).astype(sd)
+        mh, vh = m.astype(jnp.float32) / b1c, v.astype(jnp.float32) / b2c
+        ref = mw if mw is not None else p
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * ref.astype(jnp.float32)
+        new_ref = ref.astype(jnp.float32) - lr * delta
+        if mw is not None:
+            return new_ref.astype(p.dtype), m, v, new_ref
+        return new_ref.astype(p.dtype), m, v, None
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_mw = (jax.tree.leaves(state.master) if state.master is not None
+               else [None] * len(flat_p))
+    new = [upd(p, g, m, v, mw) for p, g, m, v, mw in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_mw)]
+    params = jax.tree.unflatten(tdef, [n[0] for n in new])
+    m = jax.tree.unflatten(tdef, [n[1] for n in new])
+    v = jax.tree.unflatten(tdef, [n[2] for n in new])
+    master = (jax.tree.unflatten(tdef, [n[3] for n in new])
+              if state.master is not None else None)
+    return params, OptState(step=step, m=m, v=v, master=master), \
+        {"grad_norm": gnorm, "lr": lr}

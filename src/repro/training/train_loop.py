@@ -1,0 +1,116 @@
+"""Training step construction: CE loss, microbatched gradient accumulation,
+remat — all knobs driven by the HiDP ShardingPlan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.sharding.plan import ShardingPlan
+from . import optimizer as optim
+
+
+def ce_loss(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Next-token cross entropy, mean over all positions.
+    logits: (B, T, V) fp32; targets: (B, T) — already shifted by the data
+    pipeline (targets[t] is the token after position t).
+
+    SPMD note: the gold logit is extracted with a one-hot contraction, not a
+    gather — a gather over a vocab-sharded tensor forces XLA to all-gather
+    the full logits (TB-scale at 1M tokens × 256k vocab); the contraction
+    partitions cleanly (partial sums + psum)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("btv,btv->bt", logits, onehot)
+    return (logz - gold).mean()
+
+
+def chunked_ce_loss(model: Model, params: dict, hidden: jax.Array,
+                    targets: jax.Array, chunks: int) -> jax.Array:
+    """CE computed in sequence slices so the fp32 logits working set is
+    (B, T/chunks, V) instead of (B, T, V) — at 1M tokens × 256k vocab that is
+    the difference between ~0.5 GB and ~17 GB per device.  The chunk body is
+    checkpointed: backward recomputes each slice's logits instead of storing
+    them."""
+    from repro.sharding import ctx as shard_ctx
+    b, t, d = hidden.shape
+    chunks = min(chunks, t)
+    while t % chunks:
+        chunks -= 1
+    hs = hidden.reshape(b, chunks, t // chunks, d).swapaxes(0, 1)
+    ts = targets.reshape(b, chunks, t // chunks).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        h, tg = xs
+        logits = shard_ctx.constrain_logits(model.unembed_hidden(params, h))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(tg, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum("btv,btv->bt", logits, onehot)
+        return acc + (logz - gold).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ts))
+    return total / (b * t)
+
+
+def loss_fn(model: Model, params: dict, batch: dict, *,
+            remat: bool = True, moe_impl: str = "dense",
+            remat_group: int = 1, loss_chunks: int = 8) -> jax.Array:
+    if loss_chunks > 1:
+        hidden = model.apply_train(params, batch, remat=remat,
+                                   remat_group=remat_group,
+                                   moe_impl=moe_impl, return_hidden=True)
+        return chunked_ce_loss(model, params, hidden, batch["targets"],
+                               loss_chunks)
+    logits = model.apply_train(params, batch, remat=remat,
+                               remat_group=remat_group, moe_impl=moe_impl)
+    return ce_loss(logits, batch["targets"])
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    """(B, ...) → (n, B/n, ...)."""
+    return {k: v.reshape((n, v.shape[0] // n) + v.shape[1:])
+            for k, v in batch.items()}
+
+
+def make_train_step(model: Model, opt_cfg: optim.OptConfig,
+                    plan: ShardingPlan) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  Microbatch count and remat policy come from the HiDP plan."""
+    n_micro = max(plan.microbatches, 1)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch, remat=plan.remat,
+                              remat_group=getattr(plan, "remat_group", 1),
+                              moe_impl=plan.moe_impl))(params)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            micro = _split_microbatches(batch, n_micro)
+
+            def acc_step(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros(()), zeros), micro)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+        params, opt_state, metrics = optim.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step

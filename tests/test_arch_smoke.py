@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward /
+train / prefill+decode step on CPU, asserting shapes and finiteness —
+the FULL configs are exercised only via the dry-run (ShapeDtypeStructs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.training import optimizer as optim
+from repro.training.train_loop import loss_fn, make_train_step
+from repro.sharding.plan import ShardingPlan, SINGLE_POD
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    b = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab),
+         "targets": jax.random.randint(ks[1], (B, S), 0, cfg.vocab)}
+    if cfg.family == "audio":
+        b["frames"] = jax.random.normal(ks[2], (B, S // 2, cfg.d_model),
+                                        jnp.bfloat16) * 0.1
+    if cfg.family == "vlm":
+        b["vision"] = jax.random.normal(ks[2], (B, cfg.n_vision_tokens,
+                                                cfg.d_model),
+                                        jnp.bfloat16) * 0.1
+    return b
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch(request):
+    cfg = get_config(request.param).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return request.param, cfg, model, params
+
+
+def test_forward_shapes_and_finite(arch, rng):
+    aid, cfg, model, params = arch
+    logits = model.apply_train(params, _batch(cfg, rng), remat=False)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), aid
+
+
+def test_train_step_decreases_loss(arch, rng):
+    aid, cfg, model, params = arch
+    plan = ShardingPlan(arch=aid, shape="smoke", mesh=SINGLE_POD,
+                        global_mode="data", local_layout="dp_tp",
+                        batch_axes=(), remat=False)
+    step = make_train_step(model, optim.OptConfig(lr=5e-3, warmup_steps=1),
+                           plan)
+    opt = optim.init(params)
+    batch = _batch(cfg, rng)
+    losses = []
+    for _ in range(5):
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses[-1]), aid
+    assert losses[-1] < losses[0], (aid, losses)
+
+
+def test_prefill_then_decode_matches_full_forward(arch, rng):
+    """Exactness of the serving path: prefill P tokens then decode one —
+    logits must match the full-sequence forward at that position (the
+    paper's accuracy-preservation claim, §IV-B)."""
+    aid, cfg, model, params = arch
+    batch = _batch(cfg, rng)
+    toks = batch["tokens"]
+    P = S - 1
+    pre = {k: v for k, v in batch.items() if k != "targets"}
+    pre["tokens"] = toks[:, :P]
+    pre["lengths"] = jnp.full((B,), P, jnp.int32)
+    if cfg.family == "audio":
+        pre["frames"] = batch["frames"]
+    logits_p, pcache = model.apply_prefill(params, pre)
+
+    # pad prefill cache out to S and decode token P
+    full_cache = model.init_cache(B, S, enc_len=(S // 2 if cfg.family ==
+                                                 "audio" else None))
+    padded = {}
+    for k in full_cache:
+        dst, src = full_cache[k], pcache[k]
+        if k in ("k", "v"):
+            padded[k] = dst.at[..., :P, :, :].set(src)
+        elif k in ("xk", "xv"):
+            padded[k] = src if src.shape == dst.shape else dst.at[
+                ..., :src.shape[-3], :, :].set(src)
+        else:
+            padded[k] = src        # recurrent state carries over exactly
+    dec = {"tokens": toks[:, P:P + 1],
+           "lengths": jnp.full((B,), P + 1, jnp.int32)}
+    logits_d, _ = model.apply_decode(params, padded, dec)
+
+    full = {k: v for k, v in batch.items() if k != "targets"}
+    logits_f = model.apply_train(params, full, remat=False)
+    want = logits_f[:, P]
+    got = logits_d[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_param_specs_match_init_structure(arch):
+    aid, cfg, model, params = arch
+    specs = model.param_specs()
+    s = {jax.tree_util.keystr(p): leaf
+         for p, leaf in jax.tree_util.tree_leaves_with_path(specs)}
+    p = {jax.tree_util.keystr(pa): leaf
+         for pa, leaf in jax.tree_util.tree_leaves_with_path(params)}
+    assert s.keys() == p.keys()
+    for key in s:
+        assert tuple(s[key].shape) == tuple(p[key].shape), key
+
+
+def test_full_config_param_counts():
+    """Exact configs from the brief hit their published parameter counts."""
+    expect = {"mistral-large-123b": (118e9, 127e9),
+              "mixtral-8x7b": (45e9, 48e9),
+              "qwen3-moe-30b-a3b": (29e9, 32e9),
+              "mamba2-780m": (0.7e9, 1.0e9),
+              "hymba-1.5b": (1.3e9, 1.9e9),
+              "gemma-2b": (2.2e9, 2.8e9),
+              "gemma3-1b": (0.9e9, 1.3e9),
+              "minicpm-2b": (2.2e9, 3.0e9),
+              "llama-3.2-vision-11b": (9.5e9, 12.5e9),
+              "whisper-tiny": (0.02e9, 0.08e9)}
+    for aid, (lo, hi) in expect.items():
+        n = get_config(aid).params_total()
+        assert lo <= n <= hi, (aid, n)
+
+
+def test_moe_active_params():
+    qw = get_config("qwen3-moe-30b-a3b")
+    assert qw.params_active() < 0.2 * qw.params_total()
+    mx = get_config("mixtral-8x7b")
+    assert 0.2 < mx.params_active() / mx.params_total() < 0.35

@@ -1,0 +1,62 @@
+"""Unit tests for the dry-run tooling that doesn't need 512 devices:
+the HLO collective-bytes parser and the roofline term arithmetic."""
+
+import jax.numpy as jnp
+
+from repro.launch.dryrun import collective_bytes
+from repro.models import SHAPES, build_model
+from repro.configs import get_config
+
+
+HLO = """
+HloModule test
+  %x = f32[128,256]{1,0} parameter(0)
+  %ag = f32[512,256]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}
+  %ar = bf16[64,64]{1,0} all-reduce(%y), to_apply=%add
+  %rs = f32[32]{0} reduce-scatter(%z), to_apply=%add
+  %a2a = (f32[4,8]{1,0}, f32[4,8]{1,0}) all-to-all(%p, %q)
+  %cp = u32[16,2]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %dot = f32[999,999]{1,0} dot(%a, %b)
+"""
+
+
+def test_collective_bytes_parser():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 512 * 256 * 4
+    assert out["all-reduce"] == 64 * 64 * 2
+    assert out["reduce-scatter"] == 32 * 4
+    assert out["all-to-all"] == 2 * 4 * 8 * 4
+    assert out["collective-permute"] == 16 * 2 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_collective_bytes_empty():
+    assert collective_bytes("%dot = f32[8,8] dot(%a, %b)")["total"] == 0
+
+
+def test_executed_flops_overheads():
+    """Executed-FLOPs model: train ≥ 4/3 × useful (remat); dense MoE adds
+    the all-expert waste; EP adds only capacity padding."""
+    from benchmarks.roofline import executed_flops
+    cfg = get_config("qwen3-moe-30b-a3b")
+    model = build_model(cfg)
+    shape = SHAPES["train_4k"]
+    useful = model.step_flops(shape)
+    dense = executed_flops(model, shape, {"moe_impl": "dense"})
+    ep = executed_flops(model, shape, {"moe_impl": "ep_a2a"})
+    assert dense > 4 * useful          # 16× waste on the ffn share
+    assert useful * 4 / 3 < ep < dense / 3
+    # dense LM: only remat + attention masking overheads
+    g = build_model(get_config("gemma-2b"))
+    ge = executed_flops(g, shape, {"moe_impl": "dense"})
+    assert 4 / 3 * g.step_flops(shape) <= ge <= 2.5 * g.step_flops(shape)
+
+
+def test_step_flops_sanity():
+    """6·N·D within 2× for a dense LM at train (attention/head extras)."""
+    cfg = get_config("mistral-large-123b")
+    model = build_model(cfg)
+    shape = SHAPES["train_4k"]
+    six_nd = 6.0 * cfg.params_total() * shape.global_batch * shape.seq_len
+    got = model.step_flops(shape)
+    assert 0.8 * six_nd < got < 2.0 * six_nd

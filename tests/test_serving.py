@@ -1,0 +1,76 @@
+"""Serving engine: continuous batching, slot reuse, and greedy-decode
+equivalence against a reference incremental loop."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving.engine import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    return cfg, model, params
+
+
+def _reference_greedy(model, params, prompt, n_new):
+    """Full-forward greedy decoding (no cache) — the exactness oracle."""
+    toks = list(map(int, prompt))
+    for _ in range(n_new):
+        logits = model.apply_train(
+            params, {"tokens": jnp.asarray([toks], jnp.int32)}, remat=False)
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks[len(prompt):]
+
+
+def test_engine_single_request_matches_reference(small_lm):
+    cfg, model, params = small_lm
+    prompt = np.asarray([5, 9, 2, 7], np.int32)
+    want = _reference_greedy(model, params, prompt, 6)
+
+    eng = ServingEngine(model, params, max_batch=2, max_len=32)
+    rid = eng.submit(prompt, max_new_tokens=6)
+    done = eng.run_until_done()
+    got = done[rid].generated[:6]
+    assert got == want, (got, want)
+
+
+def test_engine_batches_multiple_requests(small_lm):
+    cfg, model, params = small_lm
+    eng = ServingEngine(model, params, max_batch=2, max_len=32)
+    prompts = [np.asarray(p, np.int32) for p in
+               ([1, 2, 3], [9, 8, 7, 6], [4, 4], [11, 3, 5, 2, 1])]
+    wants = [_reference_greedy(model, params, p, 4) for p in prompts]
+    rids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    done = eng.run_until_done()
+    assert len(done) == 4                      # queue drained via slot reuse
+    for rid, want in zip(rids, wants):
+        assert done[rid].generated[:4] == want
+
+
+def test_engine_respects_max_len(small_lm):
+    cfg, model, params = small_lm
+    eng = ServingEngine(model, params, max_batch=1, max_len=12)
+    rid = eng.submit(np.asarray([1, 2, 3], np.int32), max_new_tokens=100)
+    done = eng.run_until_done()
+    assert done[rid].done
+    assert 3 + len(done[rid].generated) <= 12 + 1
+
+
+def test_engine_ssm_family():
+    """Recurrent-state arch (mamba2) through the same engine path."""
+    cfg = get_config("mamba2-780m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(5))
+    prompt = np.asarray([3, 1, 4], np.int32)
+    want = _reference_greedy(model, params, prompt, 5)
+    eng = ServingEngine(model, params, max_batch=2, max_len=24)
+    rid = eng.submit(prompt, max_new_tokens=5)
+    done = eng.run_until_done()
+    assert done[rid].generated[:5] == want

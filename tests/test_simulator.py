@@ -1,0 +1,119 @@
+"""Edge-cluster simulator + scheduler FSM: reproduction-level invariants
+(HiDP wins, FSM traces, queueing behaviour, node-count scaling)."""
+
+import pytest
+
+from repro.core import (ClusterManager, EdgeSimulator, HeartbeatMonitor,
+                        InferenceRequest, LeaderFSM, simulate)
+from repro.core.edge_models import (EDGE_MODELS, MODEL_DELTA, paper_cluster,
+                                    efficientnet_b0, resnet152)
+from repro.core.scheduler import ShardResult, State
+
+
+STRATS = ("hidp", "disnet", "omniboost", "modnn")
+
+
+def _single(strategy, name):
+    rep = simulate(paper_cluster(), strategy,
+                   [(0.0, EDGE_MODELS[name](), MODEL_DELTA[name])])
+    return rep
+
+
+def test_hidp_lowest_latency_all_models():
+    for name in EDGE_MODELS:
+        lats = {s: _single(s, name).records[0].latency for s in STRATS}
+        assert min(lats, key=lats.get) == "hidp", (name, lats)
+
+
+def test_hidp_lowest_energy_all_models():
+    for name in EDGE_MODELS:
+        ens = {s: _single(s, name).energies()[name] for s in STRATS}
+        assert min(ens, key=ens.get) == "hidp", (name, ens)
+
+
+def test_queueing_increases_latency_under_load():
+    dag = resnet152()
+    d = MODEL_DELTA["resnet152"]
+    solo = simulate(paper_cluster(), "hidp", [(0.0, dag, d)])
+    burst = simulate(paper_cluster(), "hidp",
+                     [(0.0, dag, d), (0.01, dag, d), (0.02, dag, d)])
+    l_solo = solo.records[0].latency
+    l_last = max(r.latency for r in burst.records)
+    assert l_last > l_solo * 1.5
+
+
+def test_node_scaling_monotone_for_hidp():
+    """Fig. 8: more nodes → lower (or equal) latency."""
+    dag = resnet152()
+    d = MODEL_DELTA["resnet152"]
+    lats = []
+    for n in (2, 3, 4, 5):
+        rep = simulate(paper_cluster(n), "hidp", [(0.0, dag, d)])
+        lats.append(rep.records[0].latency)
+    assert all(b <= a * 1.05 for a, b in zip(lats, lats[1:])), lats
+
+
+def test_gflops_timeline_integrates_to_total_work():
+    dag = efficientnet_b0()
+    rep = simulate(paper_cluster(), "hidp",
+                   [(0.0, dag, MODEL_DELTA["efficientnet_b0"])])
+    total = sum(s.flops for s in rep.spans)
+    assert total == pytest.approx(dag.total_flops, rel=0.02)
+
+
+# --------------------------------------------------------------------------
+# FSM
+# --------------------------------------------------------------------------
+
+class _InstantTransport:
+    def send(self, src, dst, nbytes, payload, now):
+        return now + nbytes / 80e6
+
+
+def test_leader_fsm_full_cycle():
+    mgr = ClusterManager(paper_cluster())
+    mgr.elect_leader("orin_nx")
+    now = 0.0
+    for n in mgr.nodes():
+        mgr.monitor.beat(n.name, now)
+    fsm = LeaderFSM(manager=mgr, transport=_InstantTransport())
+    req = InferenceRequest(0, resnet152(), arrival_time=now,
+                           delta=MODEL_DELTA["resnet152"])
+    plan = fsm.on_request(req, now)
+    assert fsm.state == State.GLOBAL_OFFLOAD
+    assert plan.predicted_latency > 0
+    sent = fsm.offload(now)
+    assert fsm.state == State.LOCAL_MAP
+    lp = fsm.local_map(now)
+    assert fsm.state == State.EXECUTE
+    # all shards report → merge → back to ANALYZE
+    n_shards = len(plan.global_plan.assignments)
+    for i, a in enumerate(plan.global_plan.assignments):
+        done = fsm.on_shard_result(
+            ShardResult(0, a.node.name, a.stage_index, None, now + 1.0), now)
+        assert done == (i == n_shards - 1)
+    assert fsm.state == State.ANALYZE
+    states = [s for _, s in fsm.trace]
+    assert states[:4] == [State.ANALYZE, State.EXPLORE, State.GLOBAL_OFFLOAD,
+                          State.LOCAL_MAP]
+
+
+def test_heartbeat_availability():
+    mon = HeartbeatMonitor(interval=0.5, miss_threshold=3)
+    mon.beat("a", 0.0)
+    assert mon.alive("a", 1.0)
+    assert not mon.alive("a", 2.0)          # 4 intervals missed
+    assert not mon.alive("never-seen", 0.0)
+
+
+def test_manager_failure_masks_node():
+    mgr = ClusterManager(paper_cluster())
+    mgr.elect_leader("orin_nx")
+    now = 10.0
+    for n in mgr.nodes():
+        if n.name != "rpi4":
+            mgr.monitor.beat(n.name, now)
+    cluster = mgr.refresh_availability(now)
+    av = dict(zip((n.name for n in cluster.nodes), cluster.availability()))
+    assert av["rpi4"] == 0
+    assert av["orin_nx"] == 1 and av["tx2"] == 1

@@ -1,0 +1,185 @@
+"""Training substrate: optimizer schedules, checkpoint round-trip, fault
+tolerance (restart, stragglers), data pipeline determinism, microbatch
+equivalence."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.fault_tolerance import (CheckpointPolicy,
+                                           FaultTolerantRunner,
+                                           StragglerPolicy)
+from repro.runtime.elastic import ElasticController
+from repro.models.config import SHAPES
+from repro.sharding.plan import MULTI_POD, SINGLE_POD, ShardingPlan, plan_tpu
+from repro.training import checkpoint as ckpt
+from repro.training import optimizer as optim
+from repro.training.data import SyntheticDataset
+from repro.training.train_loop import make_train_step
+
+
+def test_lr_schedules():
+    cfg = optim.OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          schedule="cosine")
+    assert float(optim.lr_at(cfg, jnp.asarray(0))) == 0.0
+    assert float(optim.lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0,
+                                                                     abs=0.03)
+    assert float(optim.lr_at(cfg, jnp.asarray(100))) < 0.01
+    wsd = optim.OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          schedule="wsd")
+    # stable phase holds peak LR; decay phase drops toward 10%
+    assert float(optim.lr_at(wsd, jnp.asarray(50))) == pytest.approx(1.0)
+    assert float(optim.lr_at(wsd, jnp.asarray(89))) == pytest.approx(1.0)
+    assert float(optim.lr_at(wsd, jnp.asarray(100))) == pytest.approx(0.1,
+                                                                      abs=.02)
+
+
+def test_adamw_converges_quadratic():
+    target = jnp.asarray([1.5, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    cfg = optim.OptConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                          weight_decay=0.0)
+    state = optim.init(params)
+    for _ in range(200):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state, _ = optim.apply_updates(cfg, params, g, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_bf16_opt_state_still_converges():
+    target = jnp.asarray([1.0, -1.0])
+    params = {"w": jnp.zeros(2)}
+    cfg = optim.OptConfig(lr=0.1, warmup_steps=1, total_steps=300,
+                          weight_decay=0.0, state_dtype="bfloat16")
+    state = optim.init(params, jnp.bfloat16)
+    for _ in range(300):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state, _ = optim.apply_updates(cfg, params, g, state)
+    assert state.m["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=5e-2)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": jnp.asarray(3, jnp.int32)}}
+    path = ckpt.save(str(tmp_path / "x.msgpack"), tree, step=17)
+    restored, step = ckpt.restore(path, tree)
+    assert step == 17
+    for l0, l1 in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert l0.dtype == l1.dtype
+        np.testing.assert_array_equal(np.asarray(l0, np.float32),
+                                      np.asarray(l1, np.float32))
+
+
+def test_checkpoint_latest_and_gc(tmp_path):
+    pol = CheckpointPolicy(str(tmp_path), every_steps=1, keep=2)
+    tree = {"w": jnp.zeros(2)}
+    for s in range(1, 6):
+        pol.maybe_save(s, tree)
+    files = sorted(os.listdir(tmp_path))
+    assert len(files) == 2
+    assert ckpt.latest(str(tmp_path)).endswith("00000005.msgpack")
+
+
+def test_fault_tolerant_runner_restarts(tmp_path):
+    """A step that crashes twice resumes from the checkpoint and finishes."""
+    pol = CheckpointPolicy(str(tmp_path), every_steps=1, keep=3)
+    crashes = {"left": 2}
+
+    def step_fn(state, batch):
+        if batch == "boom" and crashes["left"]:
+            crashes["left"] -= 1
+            raise RuntimeError("node failure")
+        return {"w": state["w"] + 1}, {"loss": float(state["w"][0])}
+
+    runner = FaultTolerantRunner(step_fn=step_fn, ckpt_policy=pol)
+    state, step, log = runner.run({"w": jnp.zeros(1)},
+                                  ["a", "b", "boom", "boom", "c"])
+    assert runner.restarts == 2
+    assert step == 3                   # a, b, c applied
+    assert len(log) == 3
+
+
+def test_straggler_detection():
+    pol = StragglerPolicy(slack=1.5, window=10)
+    for _ in range(10):
+        for p in ("pod0", "pod1", "pod2", "pod3"):
+            pol.record(p, 1.0)
+        pol.record("pod4", 2.5)
+    assert pol.stragglers() == ["pod4"]
+
+
+def test_elastic_replan_shrinks_and_is_stable():
+    model = build_model(get_config("gemma-2b"))
+    ctl = ElasticController(model, SHAPES["train_4k"], MULTI_POD)
+    p0 = ctl.initial_plan()
+    assert p0.mesh.n_pods == 2
+    p1 = ctl.on_availability_change(1)        # lose a pod
+    assert p1.mesh.n_pods == 1
+    assert ctl.replans == 1
+    p2 = ctl.on_availability_change(1)        # nothing changed → no replan
+    assert p2 is p1
+    assert ctl.replans == 1
+
+
+def test_synthetic_data_deterministic():
+    cfg = get_config("gemma-2b").reduced()
+    a = next(iter(SyntheticDataset(cfg, batch=2, seq_len=16, seed=7)))
+    b = next(iter(SyntheticDataset(cfg, batch=2, seq_len=16, seed=7)))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < cfg.vocab
+
+
+def test_microbatch_equivalence(rng):
+    """micro=2 grad-accumulated step == micro=1 step (same loss & params)."""
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = {"tokens": jax.random.randint(rng, (4, 16), 0, cfg.vocab),
+             "targets": jax.random.randint(rng, (4, 16), 0, cfg.vocab)}
+    outs = {}
+    for m in (1, 2):
+        plan = ShardingPlan(arch="t", shape="s", mesh=SINGLE_POD,
+                            global_mode="data", local_layout="x",
+                            batch_axes=(), microbatches=m, remat=False)
+        step = make_train_step(model, optim.OptConfig(lr=1e-3,
+                                                      warmup_steps=1), plan)
+        p, o, metrics = step(params, optim.init(params), batch)
+        outs[m] = (metrics["loss"], p)
+    np.testing.assert_allclose(float(outs[1][0]), float(outs[2][0]),
+                               rtol=1e-3)
+    # bf16 forward → different reduction order across microbatch shapes;
+    # AdamW's rsqrt amplifies tiny grad deltas, so tolerance is loose-ish
+    for l1, l2 in zip(jax.tree.leaves(outs[1][1]),
+                      jax.tree.leaves(outs[2][1])):
+        np.testing.assert_allclose(np.asarray(l1, np.float32),
+                                   np.asarray(l2, np.float32), atol=3e-3)
+
+
+def test_planner_emits_valid_plans_for_all_cells():
+    """plan_tpu returns structurally valid plans for every runnable cell
+    (pure planning, no lowering — fast)."""
+    from repro.configs import ARCH_IDS
+    from repro.models import shape_applicable
+    for aid in ARCH_IDS:
+        cfg = get_config(aid)
+        model = build_model(cfg)
+        for sname, shape in SHAPES.items():
+            ok, _ = shape_applicable(cfg, shape)
+            if not ok:
+                continue
+            for mesh in (SINGLE_POD, MULTI_POD):
+                plan = plan_tpu(model, shape, mesh)
+                assert plan.predicted["total"] >= 0
+                assert plan.local_layout
+                B = shape.global_batch
+                dp = plan.dp_size
+                assert dp <= max(B, 1) or plan.seq_axes, (aid, sname)
