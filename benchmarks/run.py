@@ -15,7 +15,8 @@ import time
 def main() -> None:
     from . import (fig1_partition_sweep, fig5_latency_energy,
                    fig6_gflops_timeline, fig7_throughput_mixes,
-                   fig8_node_scaling, roofline, tab1_planner_overhead)
+                   fig8_node_scaling, roofline, tab1_planner_overhead,
+                   tab2_calibration_accuracy)
 
     suites = {
         "fig1": fig1_partition_sweep.main,
@@ -24,6 +25,7 @@ def main() -> None:
         "fig7": fig7_throughput_mixes.main,
         "fig8": fig8_node_scaling.main,
         "tab1": tab1_planner_overhead.main,
+        "tab2": tab2_calibration_accuracy.main,
         "roofline": roofline.main,
     }
     picks = sys.argv[1:] or list(suites)

@@ -7,9 +7,10 @@ Public API:
     paper_cluster / EDGE_MODELS           — Table II devices, §IV workloads
 """
 
-from .cost_model import (Cluster, Node, Processor, Resource,  # noqa: F401
+from .cost_model import (ANALYTIC, AnalyticCostProvider,  # noqa: F401
+                         Cluster, CostProvider, Node, Processor, Resource,
                          node_as_resource, processors_as_resources,
-                         tpu_chip, tpu_pod)
+                         resolve_provider, tpu_chip, tpu_pod)
 from .dag import Block, DataPartition, ModelDAG, ModelPartition, chain  # noqa: F401
 from .dp_partitioner import partition, partition_data, partition_model  # noqa: F401
 from .global_partitioner import GlobalPlan, plan_global  # noqa: F401

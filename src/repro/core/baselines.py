@@ -30,42 +30,51 @@ import random
 import time
 from typing import Callable
 
-from .cost_model import Cluster, node_as_resource
+from .cost_model import (Cluster, CostProvider, node_as_resource,
+                         resolve_provider)
 from .dag import DataPartition, ModelDAG, ModelPartition
 from .dp_partitioner import partition_data, partition_model, predicted_energy
 from .global_partitioner import GlobalAssignment, GlobalPlan
 from .hidp import HiDPPlan, PlannerConfig, _hierarchical_cost, plan, sub_dag_for
 from .local_partitioner import p1_plan, plan_local
 
-Strategy = Callable[[ModelDAG, Cluster, float], HiDPPlan]
+# Strategies optionally accept ``provider=`` (a CostProvider) so the whole
+# comparison can be re-run against calibrated cost predictions.
+Strategy = Callable[..., HiDPPlan]
+
+
+def _resolve(provider: CostProvider | None, delta: float) -> CostProvider:
+    return resolve_provider(provider).at_delta(delta)
 
 
 # --------------------------------------------------------------------------
 # HiDP itself, as a Strategy
 # --------------------------------------------------------------------------
 
-def hidp_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0
-                  ) -> HiDPPlan:
-    return plan(dag, cluster, PlannerConfig(delta=delta))
+def hidp_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
+                  provider: CostProvider | None = None) -> HiDPPlan:
+    return plan(dag, cluster, PlannerConfig(delta=delta, provider=provider))
 
 
 # --------------------------------------------------------------------------
 # MoDNN — proportional data partitioning, P1 local
 # --------------------------------------------------------------------------
 
-def modnn_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0
-                   ) -> HiDPPlan:
+def modnn_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
+                   provider: CostProvider | None = None) -> HiDPPlan:
     t0 = time.perf_counter()
+    prov = _resolve(provider, delta)
+    kind = dag.dominant_kind()
     nodes = cluster.available_nodes()
     # MoDNN profiles nodes end-to-end with the default runtime, so it sees
     # default-processor capacity; it splits input proportionally to that
     # capacity (it does not drop slow helpers or model comm in the split).
     resources = [node_as_resource(n, delta, capacity="default")
                  for n in nodes]
-    total = sum(r.rate for r in resources)
-    fr = tuple(r.rate / total for r in resources)
-    per_node = [r.time_for(dag.total_flops * f,
-                           (dag.input_bytes + dag.output_bytes) * f)
+    total = sum(prov.effective_rate(r, kind) for r in resources)
+    fr = tuple(prov.effective_rate(r, kind) / total for r in resources)
+    per_node = [prov.compute_time(dag.total_flops * f, r, kind)
+                + prov.comm_time((dag.input_bytes + dag.output_bytes) * f, r)
                 for f, r in zip(fr, resources)]
     # Per-layer 1-D feature-map partitioning ⇒ boundary-row exchange at every
     # block, between σ−1 neighbour pairs, all over the shared wireless medium,
@@ -83,10 +92,11 @@ def modnn_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0
         assignments=tuple(GlobalAssignment(node=n, fraction=f, stage_index=i)
                           for i, (n, f) in enumerate(zip(nodes, fr))),
         predicted_latency=part.predicted_latency,
-        predicted_energy=predicted_energy(dag, resources, part))
-    locals_ = tuple(p1_plan(sub_dag_for(dag, a), a.node, delta=delta)
+        predicted_energy=predicted_energy(dag, resources, part, prov))
+    locals_ = tuple(p1_plan(sub_dag_for(dag, a), a.node, delta=delta,
+                            provider=prov)
                     for a in gp.assignments)
-    lat, en = _hierarchical_cost(dag, gp, locals_)
+    lat, en = _hierarchical_cost(dag, gp, locals_, prov)
     lat += halo_bytes / nodes[0].net_bw + sync_latency
     return HiDPPlan(dag_name=dag.name, global_plan=gp, local_plans=locals_,
                     predicted_latency=lat, predicted_energy=en,
@@ -100,19 +110,24 @@ def modnn_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0
 # --------------------------------------------------------------------------
 
 def _mcts_pipeline(dag: ModelDAG, resources, *, budget: int = 128,
-                   seed: int = 0, max_stages: int = 2) -> ModelPartition:
+                   seed: int = 0, max_stages: int = 2,
+                   provider: CostProvider | None = None) -> ModelPartition:
     """Monte-Carlo search over cut points: states are partial boundary lists;
     rollouts complete them randomly; reward = −max stage time (throughput).
     Deliberately budget- and depth-limited (the paper's OmniBoost explores a
     learned estimator the same way, over small candidate pipelines)."""
+    prov = resolve_provider(provider)
     rng = random.Random(seed)
     n, m = len(dag.blocks), len(resources)
-    order = sorted(range(m), key=lambda i: -resources[i].rate)
+    kind = dag.dominant_kind()
+    order = sorted(range(m),
+                   key=lambda i: -prov.effective_rate(resources[i], kind))
 
     def stage_time(a: int, b: int, ri: int) -> float:
         seg = dag.segment(a, b)
         r = resources[ri]
-        return (seg.bytes_in / r.bw + r.rtt + seg.flops / r.rate)
+        return (prov.comm_time(seg.bytes_in, r)
+                + prov.compute_time(seg.flops, r, seg.kind))
 
     def evaluate(cuts: list[int]) -> float:
         bounds = [0] + cuts + [n]
@@ -136,13 +151,14 @@ def _mcts_pipeline(dag: ModelDAG, resources, *, budget: int = 128,
                           predicted_latency=latency)
 
 
-def omniboost_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0
-                       ) -> HiDPPlan:
+def omniboost_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
+                       provider: CostProvider | None = None) -> HiDPPlan:
     t0 = time.perf_counter()
+    prov = _resolve(provider, delta)
     nodes = cluster.available_nodes()
     resources = [node_as_resource(n, delta, capacity="default")
                  for n in nodes]
-    part = _mcts_pipeline(dag, resources)
+    part = _mcts_pipeline(dag, resources, provider=prov)
     assignments = []
     for si in range(part.num_stages):
         a, b = part.boundaries[si], part.boundaries[si + 1]
@@ -152,20 +168,21 @@ def omniboost_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0
     gp = GlobalPlan(mode="model", partition=part,
                     assignments=tuple(assignments),
                     predicted_latency=part.predicted_latency,
-                    predicted_energy=predicted_energy(dag, resources, part))
+                    predicted_energy=predicted_energy(dag, resources, part,
+                                                      prov))
     # local: OmniBoost pipelines each stage over the node's CPU+GPU.
     locals_ = []
     for a in gp.assignments:
         sd = sub_dag_for(dag, a)
         from .cost_model import processors_as_resources
         lres = processors_as_resources(a.node, delta)
-        lp_part = _mcts_pipeline(sd, lres, budget=64, seed=1)
+        lp_part = _mcts_pipeline(sd, lres, budget=64, seed=1, provider=prov)
         from .local_partitioner import LocalPlan
         locals_.append(LocalPlan(
             node_name=a.node.name, mode="model", partition=lp_part,
             predicted_latency=lp_part.predicted_latency,
-            predicted_energy=predicted_energy(sd, lres, lp_part)))
-    lat, en = _hierarchical_cost(dag, gp, tuple(locals_))
+            predicted_energy=predicted_energy(sd, lres, lp_part, prov)))
+    lat, en = _hierarchical_cost(dag, gp, tuple(locals_), prov)
     return HiDPPlan(dag_name=dag.name, global_plan=gp,
                     local_plans=tuple(locals_), predicted_latency=lat,
                     predicted_energy=en,
@@ -176,24 +193,28 @@ def omniboost_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0
 # DisNet — heuristic hybrid global tier, P1 local
 # --------------------------------------------------------------------------
 
-def disnet_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0
-                    ) -> HiDPPlan:
+def disnet_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
+                    provider: CostProvider | None = None) -> HiDPPlan:
     """DisNet chooses between data and model partitioning *heuristically* at
     the global level (micro-split heuristics, not an exact DP): data fractions
     proportional to capacity, model cuts at equal-compute points; the faster
     of the two estimates wins.  No local tier (P1)."""
     t0 = time.perf_counter()
+    prov = _resolve(provider, delta)
+    kind = dag.dominant_kind()
     nodes = cluster.available_nodes()
     resources = [node_as_resource(n, delta, capacity="default")
                  for n in nodes]
-    order = sorted(range(len(nodes)), key=lambda i: -resources[i].rate)
+    order = sorted(range(len(nodes)),
+                   key=lambda i: -prov.effective_rate(resources[i], kind))
 
     # Heuristic data split: proportional fractions over all nodes.
-    total = sum(r.rate for r in resources)
-    fr = tuple(resources[i].rate / total for i in order)
-    per_node = [resources[i].time_for(
-        dag.total_flops * f, (dag.input_bytes + dag.output_bytes) * f)
-        for f, i in zip(fr, order)]
+    total = sum(prov.effective_rate(r, kind) for r in resources)
+    fr = tuple(prov.effective_rate(resources[i], kind) / total for i in order)
+    per_node = [prov.compute_time(dag.total_flops * f, resources[i], kind)
+                + prov.comm_time(
+                    (dag.input_bytes + dag.output_bytes) * f, resources[i])
+                for f, i in zip(fr, order)]
     data_part = DataPartition(fractions=fr, assignment=tuple(order),
                               predicted_latency=max(per_node))
 
@@ -213,7 +234,8 @@ def disnet_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0
     for si in range(len(bounds) - 1):
         seg = dag.segment(bounds[si], bounds[si + 1])
         r = resources[assign[si]]
-        lat += seg.bytes_in / r.bw + r.rtt + seg.flops / r.rate
+        lat += (prov.comm_time(seg.bytes_in, r)
+                + prov.compute_time(seg.flops, r, seg.kind))
     model_part = ModelPartition(boundaries=tuple(bounds), assignment=assign,
                                 predicted_latency=lat)
 
@@ -234,10 +256,12 @@ def disnet_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0
         mode = "model"
     gp = GlobalPlan(mode=mode, partition=part, assignments=assignments,
                     predicted_latency=part.predicted_latency,
-                    predicted_energy=predicted_energy(dag, resources, part))
-    locals_ = tuple(p1_plan(sub_dag_for(dag, a), a.node, delta=delta)
+                    predicted_energy=predicted_energy(dag, resources, part,
+                                                      prov))
+    locals_ = tuple(p1_plan(sub_dag_for(dag, a), a.node, delta=delta,
+                            provider=prov)
                     for a in gp.assignments)
-    lat, en = _hierarchical_cost(dag, gp, locals_)
+    lat, en = _hierarchical_cost(dag, gp, locals_, prov)
     return HiDPPlan(dag_name=dag.name, global_plan=gp, local_plans=locals_,
                     predicted_latency=lat, predicted_energy=en,
                     planning_seconds=time.perf_counter() - t0)

@@ -16,7 +16,10 @@ only the numbers differ (see DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import TYPE_CHECKING, Callable, Protocol, Sequence, runtime_checkable
+
+if TYPE_CHECKING:
+    from .dag import ModelDAG
 
 
 # --------------------------------------------------------------------------
@@ -131,10 +134,96 @@ class Resource:
     rtt: float = 0.0             # fixed per-transfer latency (s)
     active_power: float = 0.0    # W, for energy accounting
     idle_power: float = 0.0
+    # Which calibration entries describe this resource ("" → use ``name``).
+    # Distinguishes a node's Λ=Σλ view ("orin_nx") from the default-runtime
+    # view global-only strategies probe ("orin_nx/gpu").
+    profile_key: str = ""
 
     def time_for(self, block_flops: float, xfer_bytes: float) -> float:
         return compute_time(block_flops, self.rate) + comm_time(
             xfer_bytes, self.bw, self.rtt)
+
+
+# --------------------------------------------------------------------------
+# Cost providers — pluggable latency prediction
+# --------------------------------------------------------------------------
+
+@runtime_checkable
+class CostProvider(Protocol):
+    """How the planner prices compute and communication on a Resource.
+
+    The analytic provider reproduces the paper's closed-form algebra
+    (the seed behaviour, bit-identical); a calibrated provider
+    (``repro.profiling.CalibratedCostProvider``) answers from regressors
+    fitted to measured samples — the paper's DNN Model Analyzer."""
+
+    def compute_time(self, flops: float, resource: Resource,
+                     kind: str = "generic") -> float: ...
+
+    def comm_time(self, nbytes: float, resource: Resource,
+                  rtt: float | None = None) -> float: ...
+
+    def effective_rate(self, resource: Resource,
+                       kind: str = "generic") -> float: ...
+
+    def segment_coster(self, dag: "ModelDAG", resource: Resource
+                       ) -> Callable[[int, int], float]: ...
+
+    def data_coeffs(self, dag: "ModelDAG", resource: Resource
+                    ) -> tuple[float, float]: ...
+
+    def at_delta(self, delta: float) -> "CostProvider": ...
+
+
+class AnalyticCostProvider:
+    """Datasheet algebra: Θ = flops/rate, comm = rtt + bytes/bw.
+
+    Every method reduces to exactly the arithmetic the seed modules inlined,
+    so planning with this provider is bit-identical to planning without one.
+    """
+
+    def compute_time(self, flops: float, resource: Resource,
+                     kind: str = "generic") -> float:
+        return compute_time(flops, resource.rate)
+
+    def comm_time(self, nbytes: float, resource: Resource,
+                  rtt: float | None = None) -> float:
+        return comm_time(nbytes, resource.bw,
+                         resource.rtt if rtt is None else rtt)
+
+    def effective_rate(self, resource: Resource,
+                       kind: str = "generic") -> float:
+        return resource.rate
+
+    def segment_coster(self, dag: "ModelDAG", resource: Resource
+                       ) -> Callable[[int, int], float]:
+        """O(1) segment compute cost via the DAG's FLOP prefix sums."""
+        cum = dag.cumulative_flops()
+        rate = resource.rate
+
+        def cost(a: int, b: int) -> float:
+            return compute_time(cum[b] - cum[a], rate)
+
+        return cost
+
+    def data_coeffs(self, dag: "ModelDAG", resource: Resource
+                    ) -> tuple[float, float]:
+        """(seconds per unit data fraction, fixed per-slice seconds) for a
+        proportional slice of the whole DAG.  The analytic model has no
+        per-block overheads, so the fixed part is zero."""
+        return (self.compute_time(dag.total_flops, resource,
+                                  dag.dominant_kind()), 0.0)
+
+    def at_delta(self, delta: float) -> "AnalyticCostProvider":
+        """Resources arrive already δ-adjusted; nothing to rebind."""
+        return self
+
+
+ANALYTIC = AnalyticCostProvider()
+
+
+def resolve_provider(provider: CostProvider | None) -> CostProvider:
+    return ANALYTIC if provider is None else provider
 
 
 def node_as_resource(node: Node, delta: float = 1.0, kind: str = "generic",
@@ -146,6 +235,12 @@ def node_as_resource(node: Node, delta: float = 1.0, kind: str = "generic",
     strategies measure when profiling the default runtime (P1)."""
     rate = (node.compute_rate(delta, kind) if capacity == "sum"
             else node.default_rate(delta, kind))
+    if capacity == "sum":
+        profile_key = node.name                     # Λ = Σλ over calibrations
+    else:
+        default = next((p.name for p in node.processors
+                        if p.kind == node.default_processor), None)
+        profile_key = f"{node.name}/{default}" if default else node.name
     return Resource(
         name=node.name,
         rate=rate,
@@ -153,6 +248,7 @@ def node_as_resource(node: Node, delta: float = 1.0, kind: str = "generic",
         rtt=2e-3,  # wireless round-trip floor; overridden for TPU DCN
         active_power=sum(p.active_power for p in node.processors),
         idle_power=sum(p.idle_power for p in node.processors),
+        profile_key=profile_key,
     )
 
 

@@ -99,6 +99,15 @@ class ModelDAG:
             kind=seg[0].kind if len({b.kind for b in seg}) == 1 else "mixed",
         )
 
+    def dominant_kind(self) -> str:
+        """The block kind carrying the most FLOPs — picks the affinity row
+        (and the calibration bucket) when collapsing the DAG to one rate."""
+        flops_by_kind: dict[str, float] = {}
+        for b in self.blocks:
+            flops_by_kind[b.kind] = flops_by_kind.get(b.kind, 0.0) + b.flops
+        return (max(flops_by_kind, key=flops_by_kind.get)
+                if flops_by_kind else "generic")
+
     def cumulative_flops(self) -> list[float]:
         out, acc = [0.0], 0.0
         for b in self.blocks:

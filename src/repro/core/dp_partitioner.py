@@ -28,11 +28,9 @@ greedy seed the DP's first feasible path.
 
 from __future__ import annotations
 
-import dataclasses
-import math
 from typing import Sequence
 
-from .cost_model import Resource, comm_time, compute_time
+from .cost_model import CostProvider, Resource, resolve_provider
 from .dag import DataPartition, ModelDAG, ModelPartition, Partition
 
 
@@ -41,7 +39,8 @@ from .dag import DataPartition, ModelDAG, ModelPartition, Partition
 # --------------------------------------------------------------------------
 
 def partition_model(dag: ModelDAG, resources: Sequence[Resource],
-                    *, weight_transfer: bool = False) -> ModelPartition:
+                    *, weight_transfer: bool = False,
+                    provider: CostProvider | None = None) -> ModelPartition:
     """Exact DP for heterogeneous contiguous pipeline partitioning.
 
     Latency objective (single request, sequential stage execution — the
@@ -61,18 +60,21 @@ def partition_model(dag: ModelDAG, resources: Sequence[Resource],
     n = len(dag.blocks)
     if n == 0:
         raise ValueError("empty DAG")
-    order = sorted(range(len(resources)), key=lambda i: -resources[i].rate)
+    prov = resolve_provider(provider)
+    # order by the provider's view of the DAG's dominant kind — for the
+    # analytic provider this is exactly the seed's rate ordering, for a
+    # calibrated one it follows measured rates
+    kind = dag.dominant_kind()
+    order = sorted(range(len(resources)),
+                   key=lambda i: -prov.effective_rate(resources[i], kind))
     res = [resources[i] for i in order]
     m = len(res)
 
-    # Prefix sums for O(1) segment cost.
-    cum_flops = dag.cumulative_flops()
+    # Per-resource segment costers (O(1) via prefix sums).
+    costers = [prov.segment_coster(dag, r) for r in res]
     cum_params = [0.0]
     for b in dag.blocks:
         cum_params.append(cum_params[-1] + b.param_bytes)
-
-    def seg_flops(a: int, b: int) -> float:
-        return cum_flops[b] - cum_flops[a]
 
     def seg_params(a: int, b: int) -> float:
         return cum_params[b] - cum_params[a]
@@ -90,6 +92,7 @@ def partition_model(dag: ModelDAG, resources: Sequence[Resource],
 
     for j in range(1, m + 1):
         r = res[j - 1]
+        coster = costers[j - 1]
         for i in range(1, n + 1):
             for s in range(i):
                 prev = best[j - 1][s]
@@ -97,10 +100,10 @@ def partition_model(dag: ModelDAG, resources: Sequence[Resource],
                     continue
                 xfer = dag.blocks[s].bytes_in if s > 0 else dag.input_bytes
                 cost = (prev
-                        + comm_time(xfer, r.bw, r.rtt)
-                        + compute_time(seg_flops(s, i), r.rate))
+                        + prov.comm_time(xfer, r)
+                        + coster(s, i))
                 if weight_transfer and j > 1:
-                    cost += comm_time(seg_params(s, i), r.bw)
+                    cost += prov.comm_time(seg_params(s, i), r, rtt=0.0)
                 if cost < dp[j][i]:
                     dp[j][i] = cost
                     parent[(j, i)] = (j - 1, s)
@@ -110,8 +113,7 @@ def partition_model(dag: ModelDAG, resources: Sequence[Resource],
     end_j, end_cost = 0, INF
     for j in range(1, m + 1):
         if dp[j][n] < INF:
-            c = dp[j][n] + comm_time(dag.output_bytes, res[j - 1].bw,
-                                     res[j - 1].rtt)
+            c = dp[j][n] + prov.comm_time(dag.output_bytes, res[j - 1])
             if c < end_cost:
                 end_cost, end_j = c, j
     if end_cost == INF:
@@ -139,20 +141,23 @@ def partition_model(dag: ModelDAG, resources: Sequence[Resource],
 # Data partitioning (σ parallel sub-models)
 # --------------------------------------------------------------------------
 
-def _balanced_fractions(dag: ModelDAG, subset: Sequence[Resource]
+def _balanced_fractions(dag: ModelDAG, subset: Sequence[Resource],
+                        provider: CostProvider | None = None
                         ) -> tuple[tuple[float, ...], float]:
     """Water-fill data fractions so every resource finishes simultaneously.
 
     Per-resource time for fraction f:  t_i = f·(F/r_i + B_io/bw_i) + rtt_i
     Setting t_i = t for all i and Σf = 1 gives a closed form.
     """
-    F = dag.total_flops
+    prov = resolve_provider(provider)
     # bytes shipped per unit fraction: the input split + merged output + the
     # halo exchange along the deepest halo block.
     halo = max((b.bytes_out * b.halo_fraction for b in dag.blocks), default=0.0)
     bio = dag.input_bytes + dag.output_bytes + 2.0 * halo
-    k = [F / r.rate + bio / r.bw for r in subset]          # seconds per unit f
-    c = [r.rtt for r in subset]
+    coeffs = [prov.data_coeffs(dag, r) for r in subset]
+    k = [lin + prov.comm_time(bio, r, rtt=0.0)
+         for (lin, _), r in zip(coeffs, subset)]           # seconds per unit f
+    c = [r.rtt + fixed for (_, fixed), r in zip(coeffs, subset)]
     # t = (1 + Σ c_i/k_i) / Σ (1/k_i); f_i = (t - c_i)/k_i
     inv = sum(1.0 / ki for ki in k)
     t = (1.0 + sum(ci / ki for ci, ki in zip(c, k))) / inv
@@ -163,20 +168,24 @@ def _balanced_fractions(dag: ModelDAG, subset: Sequence[Resource]
     return tuple(f / s for f in fr), t
 
 
-def partition_data(dag: ModelDAG, resources: Sequence[Resource]
+def partition_data(dag: ModelDAG, resources: Sequence[Resource],
+                   *, provider: CostProvider | None = None
                    ) -> DataPartition:
     """Explore σ = 1..m sub-models over heterogeneity-ordered resources and
     keep the fastest balanced split (Eq. 6).  Blocks that are not
     data-splittable force σ = 1 (feasibility mask — e.g. recurrent decode
     state, see DESIGN.md §4)."""
-    order = sorted(range(len(resources)), key=lambda i: -resources[i].rate)
+    prov = resolve_provider(provider)
+    kind = dag.dominant_kind()
+    order = sorted(range(len(resources)),
+                   key=lambda i: -prov.effective_rate(resources[i], kind))
     if not all(b.data_splittable for b in dag.blocks):
         order = order[:1]
     best: DataPartition | None = None
     for sigma in range(1, len(order) + 1):
         subset_idx = order[:sigma]
         subset = [resources[i] for i in subset_idx]
-        fr, t = _balanced_fractions(dag, subset)
+        fr, t = _balanced_fractions(dag, subset, prov)
         if not fr:
             continue
         if best is None or t < best.predicted_latency:
@@ -192,10 +201,12 @@ def partition_data(dag: ModelDAG, resources: Sequence[Resource]
 # --------------------------------------------------------------------------
 
 def partition(dag: ModelDAG, resources: Sequence[Resource],
-              *, weight_transfer: bool = False) -> Partition:
+              *, weight_transfer: bool = False,
+              provider: CostProvider | None = None) -> Partition:
     """Θ ← min(Θ_ω, Θ_σ): run both searches, return the faster plan."""
-    theta_w = partition_model(dag, resources, weight_transfer=weight_transfer)
-    theta_s = partition_data(dag, resources)
+    theta_w = partition_model(dag, resources, weight_transfer=weight_transfer,
+                              provider=provider)
+    theta_s = partition_data(dag, resources, provider=provider)
     if theta_w.predicted_latency <= theta_s.predicted_latency:
         return theta_w
     return theta_s
@@ -206,9 +217,11 @@ def partition(dag: ModelDAG, resources: Sequence[Resource],
 # --------------------------------------------------------------------------
 
 def predicted_energy(dag: ModelDAG, resources: Sequence[Resource],
-                     plan: Partition) -> float:
+                     plan: Partition,
+                     provider: CostProvider | None = None) -> float:
     """∫P dt with active power while a resource computes/communicates and idle
     power for the rest of the plan's makespan."""
+    prov = resolve_provider(provider)
     T = plan.predicted_latency
     if isinstance(plan, ModelPartition):
         busy = {}
@@ -217,15 +230,16 @@ def predicted_energy(dag: ModelDAG, resources: Sequence[Resource],
             r = resources[plan.assignment[si]]
             seg = dag.segment(a, b)
             busy[plan.assignment[si]] = busy.get(plan.assignment[si], 0.0) + (
-                compute_time(seg.flops, r.rate)
-                + comm_time(seg.bytes_in, r.bw, r.rtt))
+                prov.compute_time(seg.flops, r, seg.kind)
+                + prov.comm_time(seg.bytes_in, r))
     else:
         busy = {}
+        kind = dag.dominant_kind()
         for f, ri in zip(plan.fractions, plan.assignment):
             r = resources[ri]
-            busy[ri] = (compute_time(dag.total_flops * f, r.rate)
-                        + comm_time((dag.input_bytes + dag.output_bytes) * f,
-                                    r.bw, r.rtt))
+            busy[ri] = (prov.compute_time(dag.total_flops * f, r, kind)
+                        + prov.comm_time(
+                            (dag.input_bytes + dag.output_bytes) * f, r))
     e = 0.0
     for i, r in enumerate(resources):
         b = min(busy.get(i, 0.0), T)

@@ -11,7 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from .cost_model import Cluster, Node, Resource, node_as_resource
+from .cost_model import (Cluster, CostProvider, Node, Resource,
+                         node_as_resource)
 from .dag import DataPartition, ModelDAG, ModelPartition, Partition
 from . import dp_partitioner
 
@@ -40,14 +41,16 @@ class GlobalPlan:
 
 def plan_global(dag: ModelDAG, cluster: Cluster, *, delta: float = 1.0,
                 weight_transfer: bool = False,
-                capacity: str = "sum") -> GlobalPlan:
+                capacity: str = "sum",
+                provider: CostProvider | None = None) -> GlobalPlan:
     nodes = cluster.available_nodes()
     if not nodes:
         raise RuntimeError("no available nodes in cluster (A(N_φ) all-zero)")
     resources = [node_as_resource(n, delta, capacity=capacity) for n in nodes]
     plan = dp_partitioner.partition(dag, resources,
-                                    weight_transfer=weight_transfer)
-    energy = dp_partitioner.predicted_energy(dag, resources, plan)
+                                    weight_transfer=weight_transfer,
+                                    provider=provider)
+    energy = dp_partitioner.predicted_energy(dag, resources, plan, provider)
 
     assignments: list[GlobalAssignment] = []
     if isinstance(plan, ModelPartition):

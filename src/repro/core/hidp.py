@@ -18,7 +18,8 @@ import dataclasses
 import time
 from typing import Sequence
 
-from .cost_model import Cluster, Node, comm_time, node_as_resource
+from .cost_model import (Cluster, CostProvider, node_as_resource,
+                         resolve_provider)
 from .dag import DataPartition, ModelDAG, ModelPartition
 from .global_partitioner import GlobalAssignment, GlobalPlan, plan_global
 from .local_partitioner import LocalPlan, p1_plan, plan_local
@@ -65,28 +66,36 @@ class PlannerConfig:
     local_tier: bool = True            # False → global-only (ablation/DisNet)
     p1_local: bool = False             # True → SoA default local behaviour
     node_capacity: str = "sum"         # "sum" (HiDP) | "default" (SoA probe)
+    # Cost predictions: None → the analytic datasheet model (seed behaviour);
+    # a CalibratedCostProvider answers from the profiling subsystem's fitted
+    # regressors (the paper's DNN Model Analyzer).
+    provider: CostProvider | None = None
 
 
 def _hierarchical_cost(dag: ModelDAG, gp: GlobalPlan,
-                       locals_: Sequence[LocalPlan]) -> tuple[float, float]:
+                       locals_: Sequence[LocalPlan],
+                       provider: CostProvider | None = None
+                       ) -> tuple[float, float]:
     """Re-cost the global plan with tier-2 refined per-node latencies."""
+    prov = resolve_provider(provider)
     energy = sum(lp.predicted_energy for lp in locals_)
     if gp.mode == "model":
         total = 0.0
         for a, lp in zip(gp.assignments, locals_):
             r = node_as_resource(a.node)
             xfer = sub_dag_for(dag, a).input_bytes
-            total += comm_time(xfer, r.bw, r.rtt) + lp.predicted_latency
-        total += comm_time(dag.output_bytes, node_as_resource(
-            gp.assignments[-1].node).bw)
+            total += prov.comm_time(xfer, r) + lp.predicted_latency
+        total += prov.comm_time(dag.output_bytes,
+                                node_as_resource(gp.assignments[-1].node),
+                                rtt=0.0)
         return total, energy
     # data mode: concurrent, slowest node dominates
     per_node = []
     for a, lp in zip(gp.assignments, locals_):
         r = node_as_resource(a.node)
         sd = sub_dag_for(dag, a)
-        per_node.append(comm_time(sd.input_bytes + sd.output_bytes, r.bw,
-                                  r.rtt) + lp.predicted_latency)
+        per_node.append(prov.comm_time(sd.input_bytes + sd.output_bytes, r)
+                        + lp.predicted_latency)
     return max(per_node), energy
 
 
@@ -94,17 +103,22 @@ def plan(dag: ModelDAG, cluster: Cluster,
          config: PlannerConfig = PlannerConfig()) -> HiDPPlan:
     """Run the full two-tier HiDP planning pass for one request."""
     t0 = time.perf_counter()
+    provider = config.provider
+    if provider is not None:
+        provider = provider.at_delta(config.delta)
     gp = plan_global(dag, cluster, delta=config.delta,
                      weight_transfer=config.weight_transfer,
-                     capacity=config.node_capacity)
+                     capacity=config.node_capacity, provider=provider)
     locals_: list[LocalPlan] = []
     for a in gp.assignments:
         sd = sub_dag_for(dag, a)
         if not config.local_tier or config.p1_local:
-            locals_.append(p1_plan(sd, a.node, delta=config.delta))
+            locals_.append(p1_plan(sd, a.node, delta=config.delta,
+                                   provider=provider))
         else:
-            locals_.append(plan_local(sd, a.node, delta=config.delta))
-    latency, energy = _hierarchical_cost(dag, gp, locals_)
+            locals_.append(plan_local(sd, a.node, delta=config.delta,
+                                      provider=provider))
+    latency, energy = _hierarchical_cost(dag, gp, locals_, provider)
     dt = time.perf_counter() - t0
     return HiDPPlan(dag_name=dag.name, global_plan=gp,
                     local_plans=tuple(locals_), predicted_latency=latency,

@@ -16,7 +16,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from .cost_model import Node, Resource, processors_as_resources
+from .cost_model import (CostProvider, Node, Resource, resolve_provider,
+                         processors_as_resources)
 from .dag import DataPartition, ModelDAG, ModelPartition, Partition
 from . import dp_partitioner
 
@@ -33,17 +34,16 @@ class LocalPlan:
 def dominant_kind(dag: ModelDAG) -> str:
     """The block kind carrying the most FLOPs — used to pick the affinity row
     when collapsing a sub-workload to a single scalar rate."""
-    flops_by_kind: dict[str, float] = {}
-    for b in dag.blocks:
-        flops_by_kind[b.kind] = flops_by_kind.get(b.kind, 0.0) + b.flops
-    return max(flops_by_kind, key=flops_by_kind.get) if flops_by_kind else "generic"
+    return dag.dominant_kind()
 
 
-def plan_local(sub_dag: ModelDAG, node: Node, *, delta: float = 1.0) -> LocalPlan:
+def plan_local(sub_dag: ModelDAG, node: Node, *, delta: float = 1.0,
+               provider: CostProvider | None = None) -> LocalPlan:
     kind = dominant_kind(sub_dag)
     resources = processors_as_resources(node, delta, kind)
-    plan = dp_partitioner.partition(sub_dag, resources)
-    energy = dp_partitioner.predicted_energy(sub_dag, resources, plan)
+    plan = dp_partitioner.partition(sub_dag, resources, provider=provider)
+    energy = dp_partitioner.predicted_energy(sub_dag, resources, plan,
+                                             provider)
     mode = "model" if isinstance(plan, ModelPartition) else "data"
     return LocalPlan(node_name=node.name, mode=mode, partition=plan,
                      predicted_latency=plan.predicted_latency,
@@ -51,23 +51,29 @@ def plan_local(sub_dag: ModelDAG, node: Node, *, delta: float = 1.0) -> LocalPla
 
 
 def p1_plan(sub_dag: ModelDAG, node: Node, *, delta: float = 1.0,
-            processor_kind: str | None = None) -> LocalPlan:
+            processor_kind: str | None = None,
+            provider: CostProvider | None = None) -> LocalPlan:
     """The SoA default (Fig. 1 config "P1"): run the whole block on a single
     processor — the framework-default device — with no local partitioning.
     Used by the MoDNN/OmniBoost/DisNet baselines and the Fig. 1 benchmark."""
-    resources = processors_as_resources(node, delta, dominant_kind(sub_dag))
+    prov = resolve_provider(provider)
+    kind = dominant_kind(sub_dag)
+    resources = processors_as_resources(node, delta, kind)
     # Prefer the requested processor kind; fall back to the fastest.
     if processor_kind is None:
         processor_kind = node.default_processor
     idx = next((i for i, p in enumerate(node.processors)
                 if p.kind == processor_kind), None)
     if idx is None:
-        idx = max(range(len(resources)), key=lambda i: resources[i].rate)
+        idx = max(range(len(resources)),
+                  key=lambda i: prov.effective_rate(resources[i], kind))
     r = resources[idx]
-    lat = r.time_for(sub_dag.total_flops, sub_dag.input_bytes
-                     + sub_dag.output_bytes)
+    # per-block segment pricing (identical to total-FLOPs ÷ rate for the
+    # analytic provider; carries fitted per-block overheads when calibrated)
+    lat = (prov.segment_coster(sub_dag, r)(0, len(sub_dag.blocks))
+           + prov.comm_time(sub_dag.input_bytes + sub_dag.output_bytes, r))
     plan = DataPartition(fractions=(1.0,), assignment=(idx,),
                          predicted_latency=lat)
-    energy = dp_partitioner.predicted_energy(sub_dag, resources, plan)
+    energy = dp_partitioner.predicted_energy(sub_dag, resources, plan, prov)
     return LocalPlan(node_name=node.name, mode="data", partition=plan,
                      predicted_latency=lat, predicted_energy=energy)

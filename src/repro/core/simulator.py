@@ -18,8 +18,8 @@ import dataclasses
 from typing import Iterable, Sequence
 
 from .baselines import STRATEGIES, Strategy
-from .cost_model import Cluster, Node, comm_time, compute_time, \
-    processors_as_resources
+from .cost_model import Cluster, CostProvider, Node, comm_time, \
+    compute_time, processors_as_resources
 from .dag import DataPartition, ModelDAG, ModelPartition
 from .hidp import HiDPPlan, sub_dag_for
 from .local_partitioner import LocalPlan, dominant_kind
@@ -102,12 +102,25 @@ class SimReport:
 
 
 class EdgeSimulator:
+    """``provider`` feeds the *planner* (what the strategy believes about the
+    hardware); ``ground_truth`` governs *execution* (what the hardware
+    actually does — a ``repro.profiling.SyntheticGroundTruth``).  Leaving both
+    None reproduces the seed behaviour exactly: planning and execution share
+    the analytic datasheet model, so predictions are perfect.  ``feedback``
+    (a ``repro.profiling.FeedbackLoop``) receives one observation per
+    executed compute shard — the run-time scheduler's measured latencies."""
+
     def __init__(self, cluster: Cluster, strategy: str | Strategy = "hidp",
-                 leader: str | None = None):
+                 leader: str | None = None,
+                 provider: CostProvider | None = None,
+                 ground_truth=None, feedback=None):
         self.cluster = cluster
         self.strategy: Strategy = (STRATEGIES[strategy]
                                    if isinstance(strategy, str) else strategy)
         self.leader = leader or cluster.nodes[0].name
+        self.provider = provider
+        self.ground_truth = ground_truth
+        self.feedback = feedback
         # capacity-1 resources
         self.proc_busy: dict[tuple[str, str], float] = {}
         self.medium_busy: float = 0.0
@@ -137,6 +150,25 @@ class EdgeSimulator:
         return end
 
     # ------------------------------------------------------- local execution
+    def _compute_seconds(self, node: Node, proc_idx: int, flops: float,
+                         analytic_rate: float, kind: str, delta: float
+                         ) -> float:
+        """Seconds a shard actually takes: analytic (seed path) unless a
+        ground truth overrides the datasheet."""
+        if self.ground_truth is None:
+            return compute_time(flops, analytic_rate)
+        return self.ground_truth.compute_seconds(
+            node.name, node.processors[proc_idx].name, flops, kind, delta)
+
+    def _observe(self, node: Node, proc_idx: int, flops: float,
+                 nbytes: float, kind: str, delta: float,
+                 measured: float) -> None:
+        """Report one executed shard to the feedback loop (run-time scheduler
+        measurements re-entering the Model Analyzer)."""
+        if self.feedback is not None and flops > 0:
+            key = f"{node.name}/{node.processors[proc_idx].name}"
+            self.feedback.observe(key, kind, flops * delta, nbytes, measured)
+
     def _run_local(self, sub: ModelDAG, node: Node, lp: LocalPlan,
                    ready: float, delta: float, rid: int
                    ) -> tuple[float, float]:
@@ -150,31 +182,43 @@ class EdgeSimulator:
             for si in range(part.num_stages):
                 a, b = part.boundaries[si], part.boundaries[si + 1]
                 seg = sub.segment(a, b)
-                r = resources[part.assignment[si]]
-                dur = (comm_time(seg.bytes_in, r.bw, r.rtt)
-                       + compute_time(seg.flops, r.rate))
-                proc = node.processors[part.assignment[si]].name
+                ri = part.assignment[si]
+                r = resources[ri]
+                compute = self._compute_seconds(node, ri, seg.flops, r.rate,
+                                                kind, delta)
+                dur = comm_time(seg.bytes_in, r.bw, r.rtt) + compute
+                proc = node.processors[ri].name
                 t = self._reserve_proc(node.name, proc, t, dur, seg.flops,
                                        r.active_power, rid)
                 energy += r.active_power * dur
+                self._observe(node, ri, seg.flops, seg.bytes_in, kind, delta,
+                              compute)
             return t, energy
         assert isinstance(part, DataPartition)
         done = ready
         for f, ri in zip(part.fractions, part.assignment):
             r = resources[ri]
-            dur = (comm_time((sub.input_bytes + sub.output_bytes) * f,
-                             r.bw, r.rtt)
-                   + compute_time(sub.total_flops * f, r.rate))
+            compute = self._compute_seconds(node, ri, sub.total_flops * f,
+                                            r.rate, kind, delta)
+            dur = comm_time((sub.input_bytes + sub.output_bytes) * f,
+                            r.bw, r.rtt) + compute
             proc = node.processors[ri].name
             end = self._reserve_proc(node.name, proc, ready, dur,
                                      sub.total_flops * f, r.active_power, rid)
             energy += r.active_power * dur
+            self._observe(node, ri, sub.total_flops * f,
+                          (sub.input_bytes + sub.output_bytes) * f, kind,
+                          delta, compute)
             done = max(done, end)
         return done, energy
 
     # ----------------------------------------------------------- one request
     def _run_request(self, req: SimRequest) -> RequestRecord:
-        plan: HiDPPlan = self.strategy(req.dag, self.cluster, req.delta)
+        if self.provider is None:
+            plan: HiDPPlan = self.strategy(req.dag, self.cluster, req.delta)
+        else:
+            plan = self.strategy(req.dag, self.cluster, req.delta,
+                                 provider=self.provider)
         t = req.arrival + plan.planning_seconds      # DP overhead (~15 ms)
         gp = plan.global_plan
         energy = 0.0
@@ -238,9 +282,12 @@ class EdgeSimulator:
                          cluster=self.cluster)
 
 
-def simulate(cluster: Cluster, strategy: str,
-             workload: Iterable[tuple[float, ModelDAG, float]]) -> SimReport:
-    sim = EdgeSimulator(cluster, strategy)
+def simulate(cluster: Cluster, strategy: str | Strategy,
+             workload: Iterable[tuple[float, ModelDAG, float]],
+             *, provider: CostProvider | None = None,
+             ground_truth=None, feedback=None) -> SimReport:
+    sim = EdgeSimulator(cluster, strategy, provider=provider,
+                        ground_truth=ground_truth, feedback=feedback)
     reqs = [SimRequest(i, dag, t, delta)
             for i, (t, dag, delta) in enumerate(workload)]
     return sim.run(reqs)

@@ -1,0 +1,13 @@
+"""jax version compatibility shims for the Pallas TPU kernels.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in newer
+jax releases; resolve whichever this environment ships so the kernels (and
+their interpret-mode tests) run on both sides of the rename.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:          # pragma: no cover - very old jax
+    raise ImportError("no Pallas TPU CompilerParams class in this jax")

@@ -25,7 +25,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from ._compat import CompilerParams
 
 
 def _kernel(xdt_ref, dacs_ref, b_ref, c_ref,
@@ -83,7 +83,7 @@ def ssd_intra_chunk(xdt: jax.Array, dacs: jax.Array, B: jax.Array,
             jax.ShapeDtypeStruct((b, nc, c, nh * hd), jnp.float32),
             jax.ShapeDtypeStruct((b, nc, nh, n, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xdt, dacs, B, C)

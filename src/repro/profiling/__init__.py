@@ -1,0 +1,31 @@
+"""repro.profiling — the paper's DNN Model Analyzer as a subsystem.
+
+Closed loop with the rest of the stack:
+
+    Profiler  ──samples──▶  LearnedCostModel  ──versioned──▶  CalibrationStore
+        ▲                        │
+        │                 CalibratedCostProvider  ──▶  planner/baselines/sim
+        │                        ▲
+    measured shard latencies     │ EWMA blend + drift-triggered refit
+    (simulator / serving) ──▶  FeedbackLoop  ──on_drift──▶  re-plan (elastic)
+
+See docs/profiling.md for the mapping onto the paper's Fig. 4 FSM.
+"""
+
+from .learned import LearnedCostModel, Sample  # noqa: F401
+from .profiler import (Profiler, SyntheticGroundTruth,  # noqa: F401
+                       block_traffic)
+from .provider import CalibratedCostProvider  # noqa: F401
+from .store import CalibrationStore  # noqa: F401
+from .feedback import DriftEvent, FeedbackLoop  # noqa: F401
+
+
+def calibrate(cluster, dags, deltas, *, ground_truth=None,
+              mode: str = "linear", profiler: "Profiler | None" = None
+              ) -> "CalibratedCostProvider":
+    """One-call convenience: profile → fit → wrap as a CostProvider."""
+    prof = profiler or Profiler()
+    samples = prof.profile_cluster(cluster, dags, deltas,
+                                   ground_truth=ground_truth)
+    model = LearnedCostModel.fit(samples, mode=mode)
+    return CalibratedCostProvider(model)

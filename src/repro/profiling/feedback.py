@@ -1,0 +1,155 @@
+"""FeedbackLoop — closing the Analyzer ↔ Scheduler cycle (paper Fig. 4).
+
+The run-time scheduler measures every shard it executes.  The loop EWMA-
+blends each observation into the *live* ``LearnedCostModel`` (so planning
+keeps improving smoothly) but detects drift against a frozen **reference**
+snapshot of each predictor, taken at fit/refit time.  Detection must not use
+the live model: the EWMA adapts within a few observations, which would mask
+exactly the sustained regime changes (thermal throttling, contention) the
+loop exists to catch.
+
+Per resource, the drift statistic is the mean relative error of the last
+``min_observations`` measurements against the reference — recent
+observations only, so a long healthy history cannot dilute a real shift.
+When a resource crosses ``threshold``, the loop
+
+  1. hard-refits that resource's predictors from its most recent
+     observations (the post-change regime, not the stale buffer),
+  2. replaces their reference snapshots with the new fits,
+  3. fires ``on_drift`` exactly once — the hook that re-enters EXPLORE:
+     ``runtime.elastic.ElasticController.on_drift`` for the TPU runtime,
+     or any re-planning callback for the edge simulator,
+  4. resets the drift windows so the refitted model gets a clean slate.
+
+A drift event therefore costs one re-plan, not one per observation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+from .learned import LearnedCostModel
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent:
+    at_observation: int
+    mean_error: float
+
+
+class FeedbackLoop:
+    def __init__(self, model: LearnedCostModel, *,
+                 threshold: float = 0.3,
+                 alpha: float = 0.3,
+                 window: int = 6,
+                 min_observations: int = 3,
+                 buffer_size: int = 64,
+                 on_drift: Callable[[], object] | None = None):
+        self.model = model
+        self.threshold = threshold
+        self.alpha = alpha
+        self.min_observations = min_observations
+        self.on_drift = on_drift
+        self.observations = 0
+        self.replans = 0
+        self.events: list[DriftEvent] = []
+        self._window = window
+        self._errors: dict[str, deque[float]] = {}
+        self._buffers: dict[tuple[str, str],
+                            deque[tuple[float, float, float]]] = {}
+        self._buffer_size = buffer_size
+        # frozen per-(key, kind) predictor snapshots drift is measured against
+        self._reference: dict[tuple[str, str], object] = {}
+
+    # ------------------------------------------------------------- ingest
+    def _reference_for(self, key: str, kind: str):
+        ek = (key, kind)
+        if ek not in self._reference:
+            live = (self.model.entries.get(ek)
+                    or self.model.entries.get((key, "generic")))
+            if live is None:
+                return None
+            self._reference[ek] = dataclasses.replace(live)
+        return self._reference[ek]
+
+    def observe(self, key: str, kind: str, work: float, traffic: float,
+                measured_s: float) -> bool:
+        """One measured shard execution.  Returns True iff this observation
+        tripped the drift threshold (and a re-plan was triggered)."""
+        if work <= 0 or measured_s <= 0:
+            return False
+        self.observations += 1
+        buf = self._buffers.setdefault(
+            (key, kind), deque(maxlen=self._buffer_size))
+        buf.append((work, traffic, measured_s))
+
+        ref = self._reference_for(key, kind)
+        if ref is None:
+            # first sight of this resource: seed predictor + reference
+            self.model.observe(key, kind, work, traffic, measured_s,
+                               alpha=1.0)
+            self._reference_for(key, kind)
+            return False
+        predicted = ref.linear(work, traffic)
+        err = abs(predicted - measured_s) / max(measured_s, 1e-12)
+        errs = self._errors.setdefault(key, deque(maxlen=self._window))
+        errs.append(err)
+        self.model.observe(key, kind, work, traffic, measured_s, self.alpha)
+
+        # trigger only when the last min_observations errors *all* exceed
+        # the threshold: a regime change sustains high error, noise does
+        # not — and waiting for a full bad tail means the refit below sees
+        # only post-change samples, so one change costs one re-plan
+        tail = list(errs)[-self.min_observations:]
+        if (len(tail) >= self.min_observations
+                and min(tail) > self.threshold):
+            drift_now = self.drift(key)
+            self._refit_key(key)
+            self.replans += 1
+            self.events.append(DriftEvent(self.observations, drift_now))
+            self._errors.clear()       # fresh slate for the refitted model
+            if self.on_drift is not None:
+                self.on_drift()
+            return True
+        return False
+
+    def drift(self, key: str | None = None) -> float:
+        """Mean relative error of the last ``min_observations`` measurements
+        against the reference — for one resource, or the worst when None."""
+        def recent_mean(errs: deque[float]) -> float:
+            tail = list(errs)[-self.min_observations:]
+            return sum(tail) / len(tail) if tail else 0.0
+        if key is not None:
+            errs = self._errors.get(key)
+            return recent_mean(errs) if errs else 0.0
+        return max((recent_mean(e) for e in self._errors.values() if e),
+                   default=0.0)
+
+    def _refit_key(self, key: str) -> None:
+        """Hard-refit the drifted resource from its *recent* observations —
+        the post-change regime — and re-snapshot its references."""
+        for (k, kind), buf in self._buffers.items():
+            if k != key or not buf:
+                continue
+            recent = list(buf)[-max(self.min_observations, 2):]
+            self.model.fit_entry(k, kind, recent)
+            self._reference[(k, kind)] = dataclasses.replace(
+                self.model.entries[(k, kind)])
+
+    # ---------------------------------------------------------- convenience
+    def ingest_plan_execution(self, spans, plans: dict | None = None) -> int:
+        """Feed a batch of simulator ExecutionSpans (duck-typed: .node,
+        .processor, .flops, .start, .end).  Returns the number of drift
+        triggers.  The span's flops are already δ-weighted by the caller's
+        convention when delta==1; prefer the simulator's built-in feedback
+        hook for per-shard accuracy."""
+        triggers = 0
+        for s in spans:
+            dur = s.end - s.start
+            if dur > 0 and s.flops > 0:
+                if self.observe(f"{s.node}/{s.processor}", "generic",
+                                s.flops, 0.0, dur):
+                    triggers += 1
+        return triggers

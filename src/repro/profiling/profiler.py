@@ -1,0 +1,199 @@
+"""Profiler — the measurement half of the paper's DNN Model Analyzer.
+
+Two measurement paths:
+
+* ``profile_cluster`` micro-benchmarks the analytic block DAGs from
+  ``core/edge_models.py`` against a ground truth — by default the datasheet
+  itself, or a ``SyntheticGroundTruth`` whose per-processor rates diverge
+  from it (thermal throttling, contention, a mis-declared board).  This is
+  the deterministic testbed path: seeded jitter, warmup discards, trimmed
+  means — the shape of real profiling without real hardware.
+
+* ``profile_kernels`` wall-clock times the actual jax kernels in
+  ``repro.kernels`` (blocked/Pallas-interpret lowering on CPU), producing
+  real timing samples for the host — the path a physical deployment extends
+  per device.
+
+Both produce ``learned.Sample`` rows that ``LearnedCostModel.fit`` consumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.cost_model import Cluster, Node, Processor
+from repro.core.dag import Block, ModelDAG
+
+from .learned import Sample
+
+
+def block_traffic(block: Block) -> float:
+    """Bytes a block touches: weights plus in/out activations."""
+    return block.param_bytes + block.bytes_in + block.bytes_out
+
+
+# --------------------------------------------------------------------------
+# Ground truth — what the hardware actually does
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SyntheticGroundTruth:
+    """True per-processor performance, possibly diverging from the datasheet.
+
+    ``rate_scale`` maps ``(node_name, proc_name)`` (or ``node_name`` for the
+    whole node) to a multiplier on the analytic rate: 0.4 means the processor
+    sustains 40% of what the cost model believes.  ``mem_bw`` and
+    ``overhead_s`` add the memory-traffic and fixed-launch terms real
+    measurements contain; ``noise`` is the relative jitter σ applied by
+    ``sample_seconds`` (deterministic under a caller-provided rng).
+    """
+
+    cluster: Cluster
+    rate_scale: Mapping[str, float] | Mapping[tuple[str, str], float] = \
+        dataclasses.field(default_factory=dict)
+    mem_bw: float = 12e9
+    overhead_s: float = 2e-4
+    noise: float = 0.0
+
+    def _proc(self, node_name: str, proc_name: str) -> tuple[Node, Processor]:
+        for n in self.cluster.nodes:
+            if n.name == node_name:
+                for p in n.processors:
+                    if p.name == proc_name:
+                        return n, p
+        raise KeyError(f"{node_name}/{proc_name}")
+
+    def scale(self, node_name: str, proc_name: str) -> float:
+        rs = dict(self.rate_scale)
+        return rs.get((node_name, proc_name),
+                      rs.get(f"{node_name}/{proc_name}",
+                             rs.get(node_name, 1.0)))
+
+    def rate(self, node_name: str, proc_name: str, kind: str,
+             delta: float) -> float:
+        """The rate the hardware actually sustains (flops/s at this δ)."""
+        _, p = self._proc(node_name, proc_name)
+        return p.rate(delta, kind) * self.scale(node_name, proc_name)
+
+    def compute_seconds(self, node_name: str, proc_name: str, flops: float,
+                        kind: str, delta: float) -> float:
+        """Pure compute time of a shard — what the simulator's EXECUTE
+        state charges when this ground truth replaces the datasheet."""
+        return flops / max(self.rate(node_name, proc_name, kind, delta),
+                           1e-12)
+
+    def block_seconds(self, node_name: str, proc_name: str, block: Block,
+                      delta: float) -> float:
+        """Noise-free micro-benchmark latency of one block."""
+        return (self.compute_seconds(node_name, proc_name, block.flops,
+                                     block.kind, delta)
+                + block_traffic(block) / self.mem_bw
+                + self.overhead_s)
+
+    def sample_seconds(self, node_name: str, proc_name: str, block: Block,
+                       delta: float, rng: np.random.Generator) -> float:
+        base = self.block_seconds(node_name, proc_name, block, delta)
+        if self.noise <= 0:
+            return base
+        return base * float(np.clip(1.0 + self.noise * rng.standard_normal(),
+                                    0.5, 2.0))
+
+
+# --------------------------------------------------------------------------
+# Profiler
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Profiler:
+    """Micro-benchmark driver: warmup, repeats, trimmed mean, fixed seed."""
+
+    warmup: int = 2
+    repeats: int = 5
+    trim: int = 1                # drop the k fastest and k slowest repeats
+    seed: int = 0
+
+    def _trimmed_mean(self, xs: Sequence[float]) -> float:
+        xs = sorted(xs)
+        if len(xs) > 2 * self.trim:
+            xs = xs[self.trim:len(xs) - self.trim]
+        return float(np.mean(xs))
+
+    def profile_cluster(self, cluster: Cluster,
+                        dags: Mapping[str, ModelDAG],
+                        deltas: Mapping[str, float],
+                        ground_truth: SyntheticGroundTruth | None = None,
+                        ) -> list[Sample]:
+        """Per-(block × processor) timing/energy samples over every node.
+
+        Deterministic: one seeded generator drives all jitter, and the
+        iteration order is fixed (nodes → processors → dags → blocks).
+        """
+        gt = ground_truth or SyntheticGroundTruth(cluster)
+        rng = np.random.default_rng(self.seed)
+        samples: list[Sample] = []
+        for node in cluster.nodes:
+            for proc in node.processors:
+                for name, dag in dags.items():
+                    delta = deltas[name]
+                    for block in dag.blocks:
+                        for _ in range(self.warmup):   # cache/DVFS settle
+                            gt.sample_seconds(node.name, proc.name, block,
+                                              delta, rng)
+                        reps = [gt.sample_seconds(node.name, proc.name,
+                                                  block, delta, rng)
+                                for _ in range(self.repeats)]
+                        lat = self._trimmed_mean(reps)
+                        samples.append(Sample(
+                            key=f"{node.name}/{proc.name}",
+                            kind=block.kind,
+                            work=block.flops * delta,
+                            traffic=block_traffic(block),
+                            latency_s=lat,
+                            energy_j=lat * proc.active_power))
+        return samples
+
+    # ------------------------------------------------------- real kernels
+    def profile_kernels(self, *, block_q: int = 32,
+                        block_k: int = 32) -> list[Sample]:
+        """Wall-clock the repro.kernels attention/SSD ops on the host.
+
+        Small shapes by design: this demonstrates the real-measurement path
+        (warmup → repeats → trimmed mean) with the same Sample output as the
+        synthetic path; a hardware deployment would sweep real shapes.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        backend = jax.default_backend()
+        key = f"host/{backend}"
+        samples: list[Sample] = []
+        rng = jax.random.PRNGKey(self.seed)
+
+        def bench(fn, *args) -> float:
+            for _ in range(self.warmup):
+                jax.block_until_ready(fn(*args))
+            reps = []
+            for _ in range(self.repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*args))
+                reps.append(time.perf_counter() - t0)
+            return self._trimmed_mean(reps)
+
+        for b, t, h, d in ((1, 64, 4, 32), (1, 128, 4, 32), (2, 128, 4, 32)):
+            ks = jax.random.split(rng, 3)
+            q = jax.random.normal(ks[0], (b, t, h, d), jnp.float32)
+            k = jax.random.normal(ks[1], (b, t, h, d), jnp.float32)
+            v = jax.random.normal(ks[2], (b, t, h, d), jnp.float32)
+            lat = bench(lambda q, k, v: ops.flash_attention(
+                q, k, v, block_q=block_q, block_k=block_k), q, k, v)
+            flops = 4.0 * b * t * t * h * d        # QK^T + AV
+            traffic = 4.0 * (q.size + k.size + v.size + q.size)
+            samples.append(Sample(key=key, kind="attn", work=flops,
+                                  traffic=traffic, latency_s=lat))
+        return samples

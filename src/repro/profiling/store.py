@@ -1,0 +1,80 @@
+"""CalibrationStore — versioned fitted models, keyed by cluster fingerprint.
+
+A calibration is only valid for the hardware it was measured on, so models
+are filed under a fingerprint of the cluster's declared topology (node and
+processor names, datasheet rates, link bandwidths, affinity tables).  Any
+change to the fleet — a board swapped, a link upgraded — changes the
+fingerprint and cleanly invalidates old calibrations.  Within a fingerprint,
+every ``save`` appends a new monotonically-numbered version; ``load``
+returns the latest by default so re-profiling supersedes without deleting
+history (the per-request plan cache can key on ``(fingerprint, version)``).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+import time
+
+from repro.core.cost_model import Cluster
+
+from .learned import LearnedCostModel
+
+
+class CalibrationStore:
+    def __init__(self, root: str | pathlib.Path):
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    # ----------------------------------------------------------- fingerprint
+    @staticmethod
+    def fingerprint(cluster: Cluster) -> str:
+        spec = [
+            (n.name, n.net_bw, n.default_processor,
+             [(p.name, p.kind, p.peak_flops, p.local_bw, list(p.affinity))
+              for p in n.processors])
+            for n in cluster.nodes
+        ]
+        digest = hashlib.sha256(
+            json.dumps(spec, sort_keys=True).encode()).hexdigest()
+        return digest[:16]
+
+    def _dir(self, cluster: Cluster) -> pathlib.Path:
+        return self.root / self.fingerprint(cluster)
+
+    # ----------------------------------------------------------------- save
+    def save(self, cluster: Cluster, model: LearnedCostModel,
+             note: str = "") -> int:
+        d = self._dir(cluster)
+        d.mkdir(parents=True, exist_ok=True)
+        version = (self.versions(cluster) or [0])[-1] + 1
+        payload = {
+            "fingerprint": self.fingerprint(cluster),
+            "version": version,
+            "note": note,
+            "created_unix": time.time(),
+            "model": model.to_dict(),
+        }
+        path = d / f"v{version:04d}.json"
+        path.write_text(json.dumps(payload, sort_keys=True, indent=1))
+        return version
+
+    # ----------------------------------------------------------------- load
+    def versions(self, cluster: Cluster) -> list[int]:
+        d = self._dir(cluster)
+        if not d.is_dir():
+            return []
+        return sorted(int(p.stem[1:]) for p in d.glob("v*.json"))
+
+    def load(self, cluster: Cluster,
+             version: int | None = None) -> LearnedCostModel:
+        versions = self.versions(cluster)
+        if not versions:
+            raise FileNotFoundError(
+                f"no calibration for fingerprint "
+                f"{self.fingerprint(cluster)} under {self.root}")
+        v = versions[-1] if version is None else version
+        path = self._dir(cluster) / f"v{v:04d}.json"
+        payload = json.loads(path.read_text())
+        return LearnedCostModel.from_dict(payload["model"])

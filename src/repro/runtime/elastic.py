@@ -54,3 +54,14 @@ class ElasticController:
         self.replans += 1
         self.current_plan = plan_tpu(self.model, self.shape, mesh)
         return self.current_plan
+
+    def on_drift(self) -> ShardingPlan:
+        """Re-enter EXPLORE because the cost model drifted, not because the
+        fleet changed: the mesh stays, the plan is recomputed.  This is the
+        hook a ``repro.profiling.FeedbackLoop`` fires when predicted and
+        measured shard latencies diverge past its threshold."""
+        mesh = (self.current_plan.mesh if self.current_plan is not None
+                else self.base_mesh)
+        self.replans += 1
+        self.current_plan = plan_tpu(self.model, self.shape, mesh)
+        return self.current_plan

@@ -14,6 +14,7 @@ Runs identically on a CPU test mesh (tiny configs) and the production mesh.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Callable
 
@@ -38,13 +39,25 @@ class Request:
 
 
 class ServingEngine:
+    """``feedback`` (a ``repro.profiling.FeedbackLoop``) closes the paper's
+    ANALYZE↔EXECUTE loop at serving time: every decode step's wall-clock
+    latency is reported as an observation keyed ``engine/decode``; when the
+    loop flags drift the engine re-enters EXPLORE (traced, counted in
+    ``replans``) and calls ``on_replan`` — typically
+    ``ElasticController.on_drift`` or a fresh HiDP planning pass."""
+
     def __init__(self, model: Model, params: dict, *, max_batch: int = 4,
-                 max_len: int = 128, plan=None, donate: bool = True):
+                 max_len: int = 128, plan=None, donate: bool = True,
+                 feedback=None, on_replan: Callable[[], Any] | None = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.plan = plan
+        self.feedback = feedback
+        self.on_replan = on_replan
+        self.replans = 0
+        self._decode_steps = 0
         self.cache = model.init_cache(max_batch, max_len)
         self.lengths = np.zeros((max_batch,), np.int32)
         self.slot_req: list[Request | None] = [None] * max_batch
@@ -155,7 +168,23 @@ class ServingEngine:
                 tokens[s, 0] = req.generated[-1]
         batch = {"tokens": jnp.asarray(tokens),
                  "lengths": jnp.asarray(np.maximum(self.lengths, 1))}
+        t0 = time.perf_counter()
         logits, self.cache = self._decode(self.params, self.cache, batch)
+        jax.block_until_ready(logits)
+        step_s = time.perf_counter() - t0
+        self._decode_steps += 1
+        if self.feedback is not None and self._decode_steps > 1:
+            # step 1 pays jit compilation — not a hardware signal
+            # work = decoded tokens this step (batch-occupancy proxy for
+            # FLOPs; the loop's regressor absorbs the per-token constant)
+            drifted = self.feedback.observe(
+                "engine/decode", "decode", float(self.active()), 0.0, step_s)
+            if drifted:
+                self.state = State.EXPLORE
+                self.trace.append(self.state)
+                self.replans += 1
+                if self.on_replan is not None:
+                    self.on_replan()
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         for s, req in enumerate(self.slot_req):
             if req is None:

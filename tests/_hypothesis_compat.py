@@ -1,0 +1,42 @@
+"""Degrade gracefully when ``hypothesis`` is absent.
+
+With hypothesis installed this re-exports the real API.  Without it, the
+property-based tests are skipped *individually* (``@given`` becomes a skip
+marker and strategy constructors become inert), so the deterministic tests
+in the same module still collect and run — instead of the whole module
+erroring at import time.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _InertStrategies:
+        """Any ``st.<name>(...)`` returns None; ``st.composite`` returns a
+        callable so ``@st.composite``-decorated strategies stay callable."""
+
+        def __getattr__(self, name):
+            if name == "composite":
+                def composite(fn):
+                    def strategy(*_a, **_k):
+                        return None
+                    return strategy
+                return composite
+
+            def strategy(*_a, **_k):
+                return None
+            return strategy
+
+    st = _InertStrategies()

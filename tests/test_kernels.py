@@ -4,8 +4,9 @@ implementations vs. the pure-jnp naive oracles in kernels/ref.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401
+
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import decode_attention as da
 from repro.kernels import flash_attention as fa

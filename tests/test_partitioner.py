@@ -3,8 +3,9 @@ model algebra, mode selection, hierarchical refinement."""
 
 import math
 
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (Block, Cluster, ModelDAG, Node, Processor, chain,
                         partition, partition_data, partition_model, plan,

@@ -1,0 +1,388 @@
+"""repro.profiling: Analyzer → LearnedCostModel → CalibratedCostProvider →
+planner/simulator, and the drift-triggered feedback loop.
+
+Also the refactor's regression guarantee: with the analytic CostProvider the
+planner and simulator are numerically identical to planning without one.
+"""
+
+import math
+
+import pytest
+
+from repro.core import (Block, Cluster, ModelDAG, Node, Processor, chain,
+                        plan, simulate, PlannerConfig)
+from repro.core.cost_model import ANALYTIC
+from repro.core.edge_models import EDGE_MODELS, MODEL_DELTA, paper_cluster
+from repro.core.simulator import EdgeSimulator, SimRequest
+from repro.profiling import (CalibratedCostProvider, CalibrationStore,
+                             FeedbackLoop, LearnedCostModel, Profiler,
+                             Sample, SyntheticGroundTruth, calibrate)
+
+
+# --------------------------------------------------------------------------
+# fixtures
+# --------------------------------------------------------------------------
+
+def three_node_cluster() -> Cluster:
+    """Three *declared-identical* nodes — calibration must discover that one
+    secretly underperforms."""
+    def node(name: str) -> Node:
+        return Node(name=name, processors=(
+            Processor(name="cpu", kind="cpu", peak_flops=5e10,
+                      local_bw=1e10, active_power=2.0, idle_power=0.5),
+            Processor(name="gpu", kind="gpu", peak_flops=2e11,
+                      local_bw=1e10, active_power=5.0, idle_power=1.0),
+        ), net_bw=1e8, default_processor="gpu")
+    return Cluster(nodes=(node("a"), node("b"), node("c")))
+
+
+def toy_dag(n: int = 12, flops: float = 2e9) -> ModelDAG:
+    blocks = [Block(name=f"b{i}", kind="conv", flops=flops,
+                    param_bytes=1e5, bytes_in=4e4, bytes_out=4e4,
+                    halo_fraction=0.02)
+              for i in range(n)]
+    return chain("toy", blocks, 4e4, 4e4)
+
+
+def paper_samples(gt=None, seed=0):
+    cluster = paper_cluster()
+    dags = {k: f() for k, f in EDGE_MODELS.items()}
+    return cluster, dags, Profiler(seed=seed).profile_cluster(
+        cluster, dags, MODEL_DELTA, ground_truth=gt)
+
+
+# --------------------------------------------------------------------------
+# regression: analytic provider is the seed, bit for bit
+# --------------------------------------------------------------------------
+
+def test_analytic_provider_is_numerically_identical():
+    cluster = paper_cluster()
+    for name in ("resnet152", "efficientnet_b0"):
+        dag = EDGE_MODELS[name]()
+        base = plan(dag, cluster, PlannerConfig(delta=MODEL_DELTA[name]))
+        prov = plan(dag, cluster, PlannerConfig(delta=MODEL_DELTA[name],
+                                                provider=ANALYTIC))
+        assert base.predicted_latency == prov.predicted_latency
+        assert base.predicted_energy == prov.predicted_energy
+        assert base.global_plan.partition == prov.global_plan.partition
+        for lp0, lp1 in zip(base.local_plans, prov.local_plans):
+            assert lp0.partition == lp1.partition
+
+
+def test_simulator_spans_identical_with_explicit_analytic_provider():
+    dag = EDGE_MODELS["resnet152"]()
+    d = MODEL_DELTA["resnet152"]
+    reqs = [SimRequest(0, dag, 0.0, d)]
+    spans0 = EdgeSimulator(paper_cluster(), "hidp").run(list(reqs)).spans
+    spans1 = EdgeSimulator(paper_cluster(), "hidp",
+                           provider=ANALYTIC).run(list(reqs)).spans
+    assert len(spans0) == len(spans1)
+    for s0, s1 in zip(spans0, spans1):
+        # absolute starts differ by wall-clock planning time only
+        assert (s0.node, s0.processor, s0.flops) == (
+            s1.node, s1.processor, s1.flops)
+        assert s0.end - s0.start == pytest.approx(s1.end - s1.start,
+                                                  rel=1e-12)
+
+
+# --------------------------------------------------------------------------
+# LearnedCostModel
+# --------------------------------------------------------------------------
+
+def test_round_trip_serialization():
+    gt = SyntheticGroundTruth(paper_cluster(),
+                              rate_scale={("orin_nx", "gpu"): 0.4},
+                              noise=0.05)
+    _, _, samples = paper_samples(gt)
+    for mode in ("linear", "isotonic"):
+        model = LearnedCostModel.fit(samples, mode=mode)
+        clone = LearnedCostModel.from_json(model.to_json())
+        assert clone.mode == model.mode
+        assert clone.entries.keys() == model.entries.keys()
+        for s in samples[::17]:
+            assert clone.predict(s.key, s.kind, s.work, s.traffic) == \
+                model.predict(s.key, s.kind, s.work, s.traffic)
+
+
+def test_fitted_latency_monotone_in_flops():
+    gt = SyntheticGroundTruth(paper_cluster(), noise=0.1)
+    _, _, samples = paper_samples(gt)
+    for mode in ("linear", "isotonic"):
+        model = LearnedCostModel.fit(samples, mode=mode)
+        for key, kind in [("orin_nx/gpu", "conv"), ("rpi4/cpu", "dense")]:
+            works = [1e8 * (2 ** i) for i in range(12)]
+            preds = [model.predict(key, kind, w, 1e5) for w in works]
+            assert all(p is not None and p > 0 for p in preds)
+            assert all(b >= a * (1 - 1e-9)
+                       for a, b in zip(preds, preds[1:])), (mode, key)
+
+
+def test_calibration_recovers_true_rates():
+    """Measured-rate recovery: a 2× mis-declared processor is learned to
+    within a few percent, and prediction MAPE beats the analytic model's."""
+    cluster = paper_cluster()
+    gt = SyntheticGroundTruth(cluster, rate_scale={("tx2", "gpu"): 0.5},
+                              noise=0.02)
+    _, dags, samples = paper_samples(gt)
+    model = LearnedCostModel.fit(samples)
+    # learned rate ≈ 0.5 × datasheet for the throttled GPU
+    tx2_gpu = [p for n in cluster.nodes if n.name == "tx2"
+               for p in n.processors if p.name == "gpu"][0]
+    learned = model.rate("tx2/gpu", "conv")
+    datasheet = tx2_gpu.rate(1.0, "conv")
+    assert learned == pytest.approx(0.5 * datasheet, rel=0.1)
+    assert model.mape_against(samples) < 0.1
+
+
+def test_node_rate_aggregates_processors():
+    samples = [
+        Sample("n/cpu", "conv", 1e9, 1e5, 1.0),
+        Sample("n/cpu", "conv", 2e9, 1e5, 2.0),
+        Sample("n/gpu", "conv", 1e9, 1e5, 0.25),
+        Sample("n/gpu", "conv", 2e9, 1e5, 0.5),
+    ]
+    model = LearnedCostModel.fit(samples)
+    assert model.rate("n/cpu", "conv") == pytest.approx(1e9, rel=1e-6)
+    assert model.rate("n/gpu", "conv") == pytest.approx(4e9, rel=1e-6)
+    # Λ = Σλ (Eq. 2) with measured λ
+    assert model.rate("n", "conv") == pytest.approx(5e9, rel=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Profiler
+# --------------------------------------------------------------------------
+
+def test_profiler_deterministic_under_seed():
+    gt = SyntheticGroundTruth(paper_cluster(), noise=0.1)
+    _, _, s0 = paper_samples(gt, seed=7)
+    _, _, s1 = paper_samples(gt, seed=7)
+    assert s0 == s1
+    _, _, s2 = paper_samples(gt, seed=8)
+    assert s0 != s2
+
+
+def test_profile_kernels_smoke():
+    samples = Profiler(warmup=1, repeats=2, trim=0).profile_kernels()
+    assert len(samples) == 3
+    assert all(s.latency_s > 0 and s.kind == "attn" for s in samples)
+    model = LearnedCostModel.fit(samples)
+    assert model.rate(samples[0].key, "attn") > 0
+
+
+# --------------------------------------------------------------------------
+# planner with calibration
+# --------------------------------------------------------------------------
+
+def test_calibrated_slow_node_gets_smaller_share():
+    cluster = three_node_cluster()
+    dag = toy_dag()
+    gt = SyntheticGroundTruth(cluster, rate_scale={"b": 0.3})
+    base = plan(dag, cluster, PlannerConfig(delta=1.0))
+    prov = calibrate(cluster, {"toy": dag}, {"toy": 1.0}, ground_truth=gt)
+    calibrated = plan(dag, cluster, PlannerConfig(delta=1.0, provider=prov))
+    assert base.mode == calibrated.mode == "data"
+
+    def share(p, node):
+        return sum(a.fraction for a in p.global_plan.assignments
+                   if a.node.name == node)
+
+    # analytic sees three identical nodes → equal thirds; calibration sees
+    # b at 30% → smaller share, and the fast nodes absorb the difference
+    assert share(base, "b") == pytest.approx(1 / 3, rel=1e-6)
+    assert share(calibrated, "b") < share(base, "b") * 0.6
+    assert share(calibrated, "a") > share(base, "a")
+
+
+def test_calibrated_plan_is_faster_on_true_hardware():
+    """The acceptance scenario: rates diverge ≥2× from the datasheet; the
+    calibrated plan simulates faster than the analytic plan on the same
+    ground truth."""
+    cluster = paper_cluster()
+    dags = {k: f() for k, f in EDGE_MODELS.items()}
+    gt = SyntheticGroundTruth(cluster, rate_scale={("orin_nx", "gpu"): 0.35,
+                                                   ("tx2", "cpu"): 0.4})
+    dag = dags["resnet152"]
+    d = MODEL_DELTA["resnet152"]
+    lat_analytic = simulate(cluster, "hidp", [(0.0, dag, d)],
+                            ground_truth=gt).records[0].latency
+    prov = calibrate(cluster, dags, MODEL_DELTA, ground_truth=gt)
+    lat_calib = simulate(cluster, "hidp", [(0.0, dag, d)], provider=prov,
+                         ground_truth=gt).records[0].latency
+    assert lat_calib < lat_analytic
+
+
+# --------------------------------------------------------------------------
+# feedback loop
+# --------------------------------------------------------------------------
+
+def test_drift_triggers_exactly_one_replan():
+    """Reality shifts 3× on one processor: the loop re-plans once, then the
+    refitted model tracks reality and stays quiet."""
+    model = LearnedCostModel.fit(
+        [Sample("n/gpu", "conv", w, 0.0, w / 1e9)
+         for w in (1e8, 2e8, 4e8, 8e8)])
+    replans = []
+    fb = FeedbackLoop(model, threshold=0.3,
+                      on_drift=lambda: replans.append(fb.observations))
+    for i in range(40):
+        work = 1e8 * (1 + i % 5)
+        fb.observe("n/gpu", "conv", work, 0.0, 3.0 * work / 1e9)
+    assert fb.replans == 1
+    assert replans == [fb.events[0].at_observation]
+    assert fb.drift() < 0.05
+    assert model.rate("n/gpu", "conv") == pytest.approx(1e9 / 3, rel=0.05)
+
+
+def test_drift_detected_after_healthy_period():
+    """The hard case: the model tracks reality for a long healthy stretch,
+    *then* the hardware throttles 3×.  Detection is against a frozen
+    reference, so the live EWMA adapting cannot mask the shift; the loop
+    re-plans exactly once and the refit (from post-change observations
+    only) then tracks the new regime."""
+    model = LearnedCostModel.fit(
+        [Sample("n/gpu", "conv", w, 0.0, w / 1e9)
+         for w in (1e8, 2e8, 4e8, 8e8)])
+    fb = FeedbackLoop(model, threshold=0.3)
+    for i in range(30):                       # healthy: predictions hold
+        work = 1e8 * (1 + i % 5)
+        fb.observe("n/gpu", "conv", work, 0.0, work / 1e9)
+    assert fb.replans == 0
+    for i in range(30):                       # thermal throttle: 3× slower
+        work = 1e8 * (1 + i % 5)
+        fb.observe("n/gpu", "conv", work, 0.0, 3.0 * work / 1e9)
+    assert fb.replans == 1
+    assert model.rate("n/gpu", "conv") == pytest.approx(1e9 / 3, rel=0.05)
+
+
+def test_calibrated_data_pricing_carries_block_overheads():
+    """partition()'s min(Θ_ω, Θ_σ) must compare like with like: the data
+    mode's predicted time includes the fitted per-block overheads that the
+    model mode's segment costs carry."""
+    from repro.core.cost_model import Resource
+    from repro.core.dp_partitioner import partition_data
+
+    overhead = 5e-3
+    model = LearnedCostModel()
+    model.fit_entry("r0", "conv",
+                    [(w, 0.0, w / 1e9 + overhead)
+                     for w in (1e6, 2e6, 4e6, 8e6)])
+    prov = CalibratedCostProvider(model)
+    dag = toy_dag(n=10, flops=1e6)
+    r = Resource(name="r0", rate=1e9, bw=1e12)
+    pd = partition_data(dag, [r], provider=prov)
+    linear, fixed = prov.data_coeffs(dag, r)
+    assert fixed == pytest.approx(10 * overhead, rel=1e-6)
+    assert pd.predicted_latency > 10 * overhead
+    # consistent with the model-mode view of the same whole-DAG segment
+    assert prov.segment_coster(dag, r)(0, 10) == \
+        pytest.approx(linear + fixed, rel=1e-9)
+
+
+def test_no_replan_when_predictions_hold():
+    model = LearnedCostModel.fit(
+        [Sample("n/gpu", "conv", w, 0.0, w / 1e9)
+         for w in (1e8, 2e8, 4e8, 8e8)])
+    fb = FeedbackLoop(model, threshold=0.3)
+    for i in range(40):
+        work = 1e8 * (1 + i % 5)
+        fb.observe("n/gpu", "conv", work, 0.0, 1.02 * work / 1e9)
+    assert fb.replans == 0
+
+
+def test_simulator_feeds_feedback_loop():
+    cluster = paper_cluster()
+    dags = {k: f() for k, f in EDGE_MODELS.items()}
+    gt = SyntheticGroundTruth(cluster, rate_scale={("orin_nx", "gpu"): 0.35})
+    clean = calibrate(cluster, dags, MODEL_DELTA)   # believes the datasheet
+    fb = FeedbackLoop(clean.model, threshold=0.3)
+    reqs = [(0.05 * i, dags["resnet152"], MODEL_DELTA["resnet152"])
+            for i in range(4)]
+    simulate(cluster, "hidp", reqs, ground_truth=gt, feedback=fb)
+    assert fb.replans == 1
+    # refitted: a second identical wave stays within tolerance
+    simulate(cluster, "hidp", reqs, ground_truth=gt, feedback=fb)
+    assert fb.replans == 1
+
+
+def test_feedback_triggers_elastic_replan():
+    pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.models.config import SHAPES
+    from repro.runtime.elastic import ElasticController
+    from repro.sharding.plan import MULTI_POD
+
+    ctl = ElasticController(build_model(get_config("gemma-2b")),
+                            SHAPES["train_4k"], MULTI_POD)
+    p0 = ctl.initial_plan()
+    model = LearnedCostModel.fit(
+        [Sample("pod0", "generic", w, 0.0, w / 1e12)
+         for w in (1e10, 2e10, 4e10)])
+    fb = FeedbackLoop(model, threshold=0.3, on_drift=ctl.on_drift)
+    for i in range(10):
+        work = 1e10 * (1 + i % 3)
+        fb.observe("pod0", "generic", work, 0.0, 4.0 * work / 1e12)
+    assert ctl.replans == 1
+    assert ctl.current_plan is not None
+    assert ctl.current_plan.mesh == p0.mesh       # same fleet, fresh plan
+
+
+# --------------------------------------------------------------------------
+# calibration store
+# --------------------------------------------------------------------------
+
+def test_store_versions_per_fingerprint(tmp_path):
+    cluster = three_node_cluster()
+    store = CalibrationStore(tmp_path)
+    model = LearnedCostModel.fit(
+        [Sample("a/gpu", "conv", 1e9, 1e5, 0.01),
+         Sample("a/gpu", "conv", 2e9, 1e5, 0.02)])
+    assert store.versions(cluster) == []
+    with pytest.raises(FileNotFoundError):
+        store.load(cluster)
+    v1 = store.save(cluster, model, note="first")
+    v2 = store.save(cluster, model, note="re-profiled")
+    assert (v1, v2) == (1, 2)
+    assert store.versions(cluster) == [1, 2]
+    loaded = store.load(cluster)
+    assert loaded.to_dict() == model.to_dict()
+    # a different fleet has a different fingerprint → no calibrations
+    other = paper_cluster()
+    assert CalibrationStore.fingerprint(other) != \
+        CalibrationStore.fingerprint(cluster)
+    assert store.versions(other) == []
+
+
+def test_calibrated_provider_respects_capacity_view():
+    """Global-only strategies probe the default runtime (P1): their node
+    resources must resolve to the default processor's measured rate, not the
+    Λ=Σλ aggregate only HiDP's local tier can realise."""
+    from repro.core.cost_model import node_as_resource
+    cluster = three_node_cluster()
+    node = cluster.nodes[0]
+    gt = SyntheticGroundTruth(cluster)
+    prov = calibrate(cluster, {"toy": toy_dag()}, {"toy": 1.0},
+                     ground_truth=gt)
+    r_sum = node_as_resource(node, 1.0, capacity="sum")
+    r_default = node_as_resource(node, 1.0, capacity="default")
+    assert r_sum.profile_key == "a"
+    assert r_default.profile_key == "a/gpu"
+    rate_sum = prov.effective_rate(r_sum, "conv")
+    rate_default = prov.effective_rate(r_default, "conv")
+    gpu_only = prov.model.rate("a/gpu", "conv")
+    assert rate_default == pytest.approx(gpu_only, rel=1e-9)
+    assert rate_sum == pytest.approx(prov.model.rate("a", "conv"), rel=1e-9)
+    assert rate_sum > rate_default                 # cpu+gpu > gpu alone
+
+
+def test_calibrated_provider_falls_back_when_uncalibrated():
+    model = LearnedCostModel.fit(
+        [Sample("a/gpu", "conv", 1e9, 1e5, 0.01)])
+    prov = CalibratedCostProvider(model)
+    from repro.core.cost_model import Resource
+    known = Resource(name="a/gpu", rate=1e11, bw=1e10)
+    unknown = Resource(name="z/npu", rate=1e11, bw=1e10)
+    assert prov.compute_time(1e9, known, "conv") == pytest.approx(0.01)
+    assert prov.compute_time(1e9, unknown, "conv") == \
+        ANALYTIC.compute_time(1e9, unknown, "conv")
+    assert math.isfinite(prov.comm_time(1e6, unknown))

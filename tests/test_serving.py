@@ -74,3 +74,30 @@ def test_engine_ssm_family():
     rid = eng.submit(prompt, max_new_tokens=5)
     done = eng.run_until_done()
     assert done[rid].generated[:5] == want
+
+
+def test_engine_feedback_reenters_explore_on_drift(small_lm):
+    """Closed loop at serving time: a cost model that wildly underestimates
+    decode latency drifts immediately; the engine re-enters EXPLORE (Fig. 4)
+    and fires the re-plan hook, and the refitted model then tracks reality."""
+    from repro.core.scheduler import State
+    from repro.profiling import FeedbackLoop, LearnedCostModel
+
+    cfg, model, params = small_lm
+    beliefs = LearnedCostModel()
+    # believes a decode step takes ~1 ns — off by many orders of magnitude
+    beliefs.fit_entry("engine/decode", "decode",
+                      [(1.0, 0.0, 1e-9), (2.0, 0.0, 2e-9)])
+    replans = []
+    fb = FeedbackLoop(beliefs, threshold=0.75,
+                      on_drift=lambda: replans.append(fb.observations))
+    eng = ServingEngine(model, params, max_batch=1, max_len=64,
+                        feedback=fb, on_replan=lambda: None)
+    rid = eng.submit(np.asarray([5, 9, 2], np.int32), max_new_tokens=40)
+    done = eng.run_until_done()
+    assert done[rid].done
+    assert eng.replans >= 1 and replans
+    assert State.EXPLORE in eng.trace
+    # after the hard refit the model's belief is in the measured ballpark
+    pred = beliefs.predict("engine/decode", "decode", 1.0, 0.0)
+    assert pred is not None and pred > 1e-7
