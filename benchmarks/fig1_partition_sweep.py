@@ -7,7 +7,6 @@ GPU-heavy splits, EfficientNet's depthwise convs push toward 50/50)."""
 
 from __future__ import annotations
 
-from repro.core import Cluster
 from repro.core.cost_model import comm_time, compute_time, \
     processors_as_resources
 from repro.core.edge_models import EDGE_MODELS, MODEL_DELTA, jetson_tx2

@@ -33,10 +33,9 @@ import os
 from repro.configs import get_config
 from repro.core import cost_model as cm
 from repro.models import SHAPES, build_model
-from repro.models.model import (_attn_ctx_flops, _eff_ctx, _moe_flops,
+from repro.models.model import (_attn_ctx_flops, _eff_ctx,
                                 _per_layer_windows)
-from repro.sharding.plan import (MULTI_POD, SINGLE_POD, _collective_bytes_per_chip,
-                                 _moe_ffn_share, _train_bytes_per_chip)
+from repro.sharding.plan import _moe_ffn_share
 
 PEAK = cm.TPU_V5E_PEAK_FLOPS
 HBM = cm.TPU_V5E_HBM_BW

@@ -8,7 +8,6 @@ import time
 import numpy as np
 
 from repro.core import PlannerConfig, plan
-from repro.core.baselines import STRATEGIES
 from repro.core.edge_models import EDGE_MODELS, MODEL_DELTA, paper_cluster
 
 from .common import emit

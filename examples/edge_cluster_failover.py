@@ -6,7 +6,6 @@ completing, at reduced throughput, with zero manual intervention.
 """
 
 from repro.core import ClusterManager, EdgeSimulator, SimRequest
-from repro.core.baselines import hidp_strategy
 from repro.core.edge_models import MODEL_DELTA, paper_cluster, inceptionv3
 
 cluster5 = paper_cluster()

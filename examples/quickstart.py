@@ -1,11 +1,13 @@
 """Quickstart: plan a DNN inference request with HiDP and compare against the
-SoA baselines — the paper's core loop in ~40 lines.
+SoA baselines — the paper's core loop in ~50 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import STRATEGIES, PlannerConfig, plan, simulate
-from repro.core.edge_models import MODEL_DELTA, paper_cluster, resnet152
+from repro.core import (EdgeSimulator, Objective, STRATEGIES, PlannerConfig,
+                        plan, simulate)
+from repro.core.edge_models import (MODEL_DELTA, battery_cluster,
+                                    paper_cluster, resnet152)
 
 cluster = paper_cluster()          # Orin NX + TX2 + Nano + RPi5 + RPi4
 dag = resnet152()                  # the DNN as a partitionable block DAG
@@ -31,3 +33,18 @@ for name in STRATEGIES:
     r = rep.records[0]
     print(f"{name:10s} latency={r.latency * 1e3:7.0f} ms   "
           f"energy={rep.energies()['resnet152']:6.1f} J   mode={r.mode}")
+
+# --- energy-aware planning (docs/energy.md) ---------------------------------
+# On a duty-cycled (battery) fleet, minimize energy under a latency budget.
+battery = battery_cluster()
+base = plan(dag, battery, PlannerConfig(delta=delta))
+obj = Objective("energy", latency_budget=base.predicted_latency * 1.35,
+                radio_power=EdgeSimulator.RADIO_POWER)
+frugal = plan(dag, battery, PlannerConfig(delta=delta, objective=obj))
+print(f"\nbattery fleet: latency-optimal {base.predicted_latency * 1e3:.0f} ms"
+      f" / {base.predicted_energy:.1f} J  →  energy-optimal "
+      f"{frugal.predicted_latency * 1e3:.0f} ms / "
+      f"{frugal.predicted_energy:.1f} J "
+      f"(budget {obj.latency_budget * 1e3:.0f} ms, "
+      f"{len(frugal.global_plan.assignments)} of "
+      f"{len(battery.nodes)} nodes)")

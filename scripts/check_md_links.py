@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Check that intra-repo markdown links resolve.
+
+Scans every ``*.md`` file in the repository (skipping dot-directories) for
+inline links/images ``[text](target)`` and reference definitions
+``[ref]: target``, and verifies that each relative target exists on disk
+(anchors and ``http(s)``/``mailto`` links are skipped).  Exits non-zero
+listing every broken link — the docs job in ``.github/workflows/ci.yml``
+runs this on every push.
+
+    python scripts/check_md_links.py [root]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# inline [text](target) and image ![alt](target); stop at whitespace or ')'
+_INLINE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+# reference-style definitions: [ref]: target
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+
+
+def _targets(text: str) -> list[str]:
+    return _INLINE.findall(text) + _REFDEF.findall(text)
+
+
+def check(root: pathlib.Path) -> list[str]:
+    errors: list[str] = []
+    md_files = [p for p in root.rglob("*.md")
+                if not any(part.startswith(".") for part in p.parts)]
+    for md in sorted(md_files):
+        # fenced code blocks may contain [x](y)-looking text — drop them
+        text = re.sub(r"```.*?```", "", md.read_text(), flags=re.DOTALL)
+        for target in _targets(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(root)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    errors = check(root)
+    for e in errors:
+        print(e)
+    checked = len([p for p in root.rglob('*.md')
+                   if not any(part.startswith('.') for part in p.parts)])
+    print(f"{'FAIL' if errors else 'OK'}: {checked} markdown files, "
+          f"{len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

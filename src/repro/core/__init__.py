@@ -2,6 +2,7 @@
 
 Public API:
     plan(dag, cluster, config)            — two-tier HiDP planning
+    Objective                             — latency | energy | edp (+ budget)
     STRATEGIES                            — hidp / modnn / omniboost / disnet
     EdgeSimulator / simulate              — faithful-reproduction testbed
     paper_cluster / EDGE_MODELS           — Table II devices, §IV workloads
@@ -12,7 +13,9 @@ from .cost_model import (ANALYTIC, AnalyticCostProvider,  # noqa: F401
                          node_as_resource, processors_as_resources,
                          resolve_provider, tpu_chip, tpu_pod)
 from .dag import Block, DataPartition, ModelDAG, ModelPartition, chain  # noqa: F401
-from .dp_partitioner import partition, partition_data, partition_model  # noqa: F401
+from .objective import LATENCY, Objective, resolve_objective  # noqa: F401
+from .dp_partitioner import (partition, partition_data,  # noqa: F401
+                             partition_model, predicted_energy)
 from .global_partitioner import GlobalPlan, plan_global  # noqa: F401
 from .local_partitioner import LocalPlan, p1_plan, plan_local  # noqa: F401
 from .hidp import HiDPPlan, PlannerConfig, plan, sub_dag_for  # noqa: F401
@@ -20,4 +23,5 @@ from .baselines import STRATEGIES  # noqa: F401
 from .scheduler import FollowerFSM, InferenceRequest, LeaderFSM, State  # noqa: F401
 from .cluster import ClusterManager, HeartbeatMonitor  # noqa: F401
 from .simulator import EdgeSimulator, SimReport, SimRequest, simulate  # noqa: F401
-from .edge_models import EDGE_MODELS, MODEL_DELTA, paper_cluster  # noqa: F401
+from .edge_models import (EDGE_MODELS, MODEL_DELTA,  # noqa: F401
+                          battery_cluster, paper_cluster)

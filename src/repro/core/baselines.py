@@ -37,9 +37,14 @@ from .dp_partitioner import partition_data, partition_model, predicted_energy
 from .global_partitioner import GlobalAssignment, GlobalPlan
 from .hidp import HiDPPlan, PlannerConfig, _hierarchical_cost, plan, sub_dag_for
 from .local_partitioner import p1_plan, plan_local
+from .objective import Objective, resolve_objective
 
 # Strategies optionally accept ``provider=`` (a CostProvider) so the whole
-# comparison can be re-run against calibrated cost predictions.
+# comparison can be re-run against calibrated cost predictions, and
+# ``objective=`` (an Objective) so it can be re-run minimizing energy or EDP
+# wherever the strategy has a real degree of freedom (HiDP: both DP tiers;
+# DisNet: its global mode choice; MoDNN's proportional split and OmniBoost's
+# throughput-reward MCTS are fixed by their papers and ignore it).
 Strategy = Callable[..., HiDPPlan]
 
 
@@ -52,8 +57,10 @@ def _resolve(provider: CostProvider | None, delta: float) -> CostProvider:
 # --------------------------------------------------------------------------
 
 def hidp_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
-                  provider: CostProvider | None = None) -> HiDPPlan:
-    return plan(dag, cluster, PlannerConfig(delta=delta, provider=provider))
+                  provider: CostProvider | None = None,
+                  objective: Objective | None = None) -> HiDPPlan:
+    return plan(dag, cluster, PlannerConfig(delta=delta, provider=provider,
+                                            objective=objective))
 
 
 # --------------------------------------------------------------------------
@@ -61,7 +68,8 @@ def hidp_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
 # --------------------------------------------------------------------------
 
 def modnn_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
-                   provider: CostProvider | None = None) -> HiDPPlan:
+                   provider: CostProvider | None = None,
+                   objective: Objective | None = None) -> HiDPPlan:
     t0 = time.perf_counter()
     prov = _resolve(provider, delta)
     kind = dag.dominant_kind()
@@ -96,7 +104,7 @@ def modnn_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
     locals_ = tuple(p1_plan(sub_dag_for(dag, a), a.node, delta=delta,
                             provider=prov)
                     for a in gp.assignments)
-    lat, en = _hierarchical_cost(dag, gp, locals_, prov)
+    lat, en = _hierarchical_cost(dag, gp, locals_, prov, objective)
     lat += halo_bytes / nodes[0].net_bw + sync_latency
     return HiDPPlan(dag_name=dag.name, global_plan=gp, local_plans=locals_,
                     predicted_latency=lat, predicted_energy=en,
@@ -152,7 +160,8 @@ def _mcts_pipeline(dag: ModelDAG, resources, *, budget: int = 128,
 
 
 def omniboost_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
-                       provider: CostProvider | None = None) -> HiDPPlan:
+                       provider: CostProvider | None = None,
+                       objective: Objective | None = None) -> HiDPPlan:
     t0 = time.perf_counter()
     prov = _resolve(provider, delta)
     nodes = cluster.available_nodes()
@@ -182,7 +191,8 @@ def omniboost_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
             node_name=a.node.name, mode="model", partition=lp_part,
             predicted_latency=lp_part.predicted_latency,
             predicted_energy=predicted_energy(sd, lres, lp_part, prov)))
-    lat, en = _hierarchical_cost(dag, gp, tuple(locals_), prov)
+    lat, en = _hierarchical_cost(dag, gp, tuple(locals_), prov,
+                                 objective)
     return HiDPPlan(dag_name=dag.name, global_plan=gp,
                     local_plans=tuple(locals_), predicted_latency=lat,
                     predicted_energy=en,
@@ -194,11 +204,13 @@ def omniboost_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
 # --------------------------------------------------------------------------
 
 def disnet_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
-                    provider: CostProvider | None = None) -> HiDPPlan:
+                    provider: CostProvider | None = None,
+                    objective: Objective | None = None) -> HiDPPlan:
     """DisNet chooses between data and model partitioning *heuristically* at
     the global level (micro-split heuristics, not an exact DP): data fractions
-    proportional to capacity, model cuts at equal-compute points; the faster
-    of the two estimates wins.  No local tier (P1)."""
+    proportional to capacity, model cuts at equal-compute points; the better
+    of the two estimates under the objective wins (the faster one for the
+    default latency objective — the seed behaviour).  No local tier (P1)."""
     t0 = time.perf_counter()
     prov = _resolve(provider, delta)
     kind = dag.dominant_kind()
@@ -239,8 +251,19 @@ def disnet_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
     model_part = ModelPartition(boundaries=tuple(bounds), assignment=assign,
                                 predicted_latency=lat)
 
-    part = (data_part if data_part.predicted_latency
-            <= model_part.predicted_latency else model_part)
+    obj = resolve_objective(objective)
+    if obj.is_latency:
+        part = (data_part if data_part.predicted_latency
+                <= model_part.predicted_latency else model_part)
+    else:
+        en_d = predicted_energy(dag, resources, data_part, prov,
+                                radio_power=obj.radio_power)
+        en_m = predicted_energy(dag, resources, model_part, prov,
+                                radio_power=obj.radio_power)
+        part = (data_part
+                if obj.at_least_as_good(data_part.predicted_latency, en_d,
+                                        model_part.predicted_latency, en_m)
+                else model_part)
     if isinstance(part, DataPartition):
         assignments = tuple(
             GlobalAssignment(node=nodes[ri], fraction=f, stage_index=i)
@@ -261,7 +284,7 @@ def disnet_strategy(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
     locals_ = tuple(p1_plan(sub_dag_for(dag, a), a.node, delta=delta,
                             provider=prov)
                     for a in gp.assignments)
-    lat, en = _hierarchical_cost(dag, gp, locals_, prov)
+    lat, en = _hierarchical_cost(dag, gp, locals_, prov, objective)
     return HiDPPlan(dag_name=dag.name, global_plan=gp, local_plans=locals_,
                     predicted_latency=lat, predicted_energy=en,
                     planning_seconds=time.perf_counter() - t0)

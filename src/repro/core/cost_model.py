@@ -150,12 +150,41 @@ class Resource:
 
 @runtime_checkable
 class CostProvider(Protocol):
-    """How the planner prices compute and communication on a Resource.
+    """How the planner prices compute, communication, and energy on a
+    :class:`Resource`.
 
     The analytic provider reproduces the paper's closed-form algebra
     (the seed behaviour, bit-identical); a calibrated provider
     (``repro.profiling.CalibratedCostProvider``) answers from regressors
-    fitted to measured samples — the paper's DNN Model Analyzer."""
+    fitted to measured samples — the paper's DNN Model Analyzer.
+
+    Latency queries:
+
+    * ``compute_time(flops, resource, kind)`` — seconds to execute
+      ``flops`` on the resource.
+    * ``comm_time(nbytes, resource, rtt)`` — seconds to move ``nbytes``
+      over the resource's link (``rtt=None`` uses the resource's own).
+    * ``effective_rate(resource, kind)`` — flops/s as the provider believes
+      them; orders resources by heterogeneity.
+    * ``segment_coster(dag, resource)`` — O(1) ``cost(a, b)`` for the
+      compute seconds of ``dag.blocks[a:b]`` (prefix-summed).
+    * ``data_coeffs(dag, resource)`` — ``(linear, fixed)`` seconds pricing a
+      proportional data slice: fraction *f* costs ``f·linear + fixed``.
+
+    Energy queries (J; the active-power draw while the resource works —
+    idle power is accounted by the caller over the plan makespan):
+
+    * ``energy(flops, nbytes, resource, kind)`` — joules to execute
+      ``flops`` and move ``nbytes`` on the resource.
+    * ``compute_energy(flops, resource, kind)`` / ``comm_energy(nbytes,
+      resource, rtt)`` — the two terms of ``energy`` separately.
+    * ``segment_energy_coster(dag, resource)`` — O(1) ``cost(a, b)`` for
+      the compute joules of ``dag.blocks[a:b]``.
+
+    ``at_delta(delta)`` rebinds the provider to a model's compute intensity
+    (cycles/flop); the analytic provider is δ-invariant because its
+    resources arrive already δ-adjusted.
+    """
 
     def compute_time(self, flops: float, resource: Resource,
                      kind: str = "generic") -> float: ...
@@ -171,6 +200,18 @@ class CostProvider(Protocol):
 
     def data_coeffs(self, dag: "ModelDAG", resource: Resource
                     ) -> tuple[float, float]: ...
+
+    def energy(self, flops: float, nbytes: float, resource: Resource,
+               kind: str = "generic") -> float: ...
+
+    def compute_energy(self, flops: float, resource: Resource,
+                       kind: str = "generic") -> float: ...
+
+    def comm_energy(self, nbytes: float, resource: Resource,
+                    rtt: float | None = None) -> float: ...
+
+    def segment_energy_coster(self, dag: "ModelDAG", resource: Resource
+                              ) -> Callable[[int, int], float]: ...
 
     def at_delta(self, delta: float) -> "CostProvider": ...
 
@@ -213,6 +254,37 @@ class AnalyticCostProvider:
         per-block overheads, so the fixed part is zero."""
         return (self.compute_time(dag.total_flops, resource,
                                   dag.dominant_kind()), 0.0)
+
+    # ------------------------------------------------------------- energy
+    # The datasheet energy model is P_active × time — exactly the algebra the
+    # seed's ``predicted_energy`` inlined, now queryable per term so the DP
+    # can minimize energy directly.
+
+    def energy(self, flops: float, nbytes: float, resource: Resource,
+               kind: str = "generic") -> float:
+        """J to execute ``flops`` and move ``nbytes``: active_power × time."""
+        return (self.compute_energy(flops, resource, kind)
+                + self.comm_energy(nbytes, resource))
+
+    def compute_energy(self, flops: float, resource: Resource,
+                       kind: str = "generic") -> float:
+        return resource.active_power * self.compute_time(flops, resource,
+                                                         kind)
+
+    def comm_energy(self, nbytes: float, resource: Resource,
+                    rtt: float | None = None) -> float:
+        return resource.active_power * self.comm_time(nbytes, resource, rtt)
+
+    def segment_energy_coster(self, dag: "ModelDAG", resource: Resource
+                              ) -> Callable[[int, int], float]:
+        """O(1) segment compute energy: active_power × segment seconds."""
+        coster = self.segment_coster(dag, resource)
+        watts = resource.active_power
+
+        def cost(a: int, b: int) -> float:
+            return watts * coster(a, b)
+
+        return cost
 
     def at_delta(self, delta: float) -> "AnalyticCostProvider":
         """Resources arrive already δ-adjusted; nothing to rebind."""

@@ -32,6 +32,7 @@ from typing import Sequence
 
 from .cost_model import CostProvider, Resource, resolve_provider
 from .dag import DataPartition, ModelDAG, ModelPartition, Partition
+from .objective import Objective, resolve_objective
 
 
 # --------------------------------------------------------------------------
@@ -40,7 +41,8 @@ from .dag import DataPartition, ModelDAG, ModelPartition, Partition
 
 def partition_model(dag: ModelDAG, resources: Sequence[Resource],
                     *, weight_transfer: bool = False,
-                    provider: CostProvider | None = None) -> ModelPartition:
+                    provider: CostProvider | None = None,
+                    objective: Objective | None = None) -> ModelPartition:
     """Exact DP for heterogeneous contiguous pipeline partitioning.
 
     Latency objective (single request, sequential stage execution — the
@@ -56,11 +58,22 @@ def partition_model(dag: ModelDAG, resources: Sequence[Resource],
     also pays its ``param_bytes`` over that resource's link (cold start —
     used by the simulator's first-request path; steady-state serving keeps
     weights resident, the paper's implicit assumption).
+
+    ``objective``: what the recurrence minimizes.  The default (latency)
+    runs the seed's scalar DP unchanged.  For ``energy``/``edp`` the DP
+    tracks (latency, energy) pairs and compares states by
+    ``Objective.key``; per-stage energy is additive because a pipeline busies
+    one resource at a time — stage energy = active compute+comm joules plus
+    the *other* resources' idle power over the stage's seconds (the
+    idle-coupling that makes "slow but frugal" a real trade-off, not a free
+    win).  EDP is not stage-separable, so for ``edp`` the prefix
+    scalarization is a (well-behaved) heuristic rather than an exact DP.
     """
     n = len(dag.blocks)
     if n == 0:
         raise ValueError("empty DAG")
     prov = resolve_provider(provider)
+    obj = resolve_objective(objective)
     # order by the provider's view of the DAG's dominant kind — for the
     # analytic provider this is exactly the seed's rate ordering, for a
     # calibrated one it follows measured rates
@@ -79,13 +92,21 @@ def partition_model(dag: ModelDAG, resources: Sequence[Resource],
     def seg_params(a: int, b: int) -> float:
         return cum_params[b] - cum_params[a]
 
+    if not obj.is_latency:
+        return _partition_model_objective(
+            dag, resources, res, order, costers, seg_params,
+            weight_transfer=weight_transfer, prov=prov, obj=obj)
+
     INF = float("inf")
     # dp[j][i]: best latency for blocks[:i] using a subset of the first j
     # resources where resource j-1 runs the last stage ending at i.
     # best[j][i]: min over j'<=j of dp, i.e. blocks[:i] done within first j res.
+    # bestj[j][i]: the j' achieving best[j][i] — so the backtrack can follow
+    # the exact state chain instead of guessing which dp row realised it.
     dp = [[INF] * (n + 1) for _ in range(m + 1)]
     best = [[INF] * (n + 1) for _ in range(m + 1)]
-    parent: dict[tuple[int, int], tuple[int, int]] = {}
+    bestj = [[0] * (n + 1) for _ in range(m + 1)]
+    parent: dict[tuple[int, int], int] = {}      # (j, i) → stage start s
     for j in range(m + 1):
         dp[j][0] = 0.0
         best[j][0] = 0.0
@@ -106,8 +127,11 @@ def partition_model(dag: ModelDAG, resources: Sequence[Resource],
                     cost += prov.comm_time(seg_params(s, i), r, rtt=0.0)
                 if cost < dp[j][i]:
                     dp[j][i] = cost
-                    parent[(j, i)] = (j - 1, s)
-            best[j][i] = min(best[j - 1][i], dp[j][i])
+                    parent[(j, i)] = s
+            if dp[j][i] < best[j - 1][i]:
+                best[j][i], bestj[j][i] = dp[j][i], j
+            else:
+                best[j][i], bestj[j][i] = best[j - 1][i], bestj[j - 1][i]
 
     # Final answer: best over how many resources considered; add result return.
     end_j, end_cost = 0, INF
@@ -119,22 +143,136 @@ def partition_model(dag: ModelDAG, resources: Sequence[Resource],
     if end_cost == INF:
         raise RuntimeError("model-partition DP found no feasible plan")
 
-    # Back-propagate block by block (paper's phrasing) to recover cuts.
+    # Back-propagate block by block (paper's phrasing) to recover cuts:
+    # stage (s, i) runs on res j-1; the prefix blocks[:s] was realised by
+    # the dp row bestj[j-1][s] that achieved best[j-1][s].
     cuts: list[int] = [n]
     assign: list[int] = []
     j, i = end_j, n
     while i > 0:
-        # Walk down to the j whose dp achieved best[j][i] on this path.
-        while j > 0 and (j, i) not in parent:
-            j -= 1
-        pj, s = parent[(j, i)]
+        s = parent[(j, i)]
         assign.append(order[j - 1])
         cuts.append(s)
-        j, i = pj, s
+        j, i = bestj[j - 1][s], s
     cuts.reverse()
     assign.reverse()
     return ModelPartition(boundaries=tuple(cuts), assignment=tuple(assign),
                           predicted_latency=end_cost)
+
+
+def _partition_model_objective(dag: ModelDAG, resources: Sequence[Resource],
+                               res: list[Resource], order: list[int],
+                               costers: list, seg_params,
+                               *, weight_transfer: bool,
+                               prov: CostProvider,
+                               obj: Objective) -> ModelPartition:
+    """The (latency, energy)-pair variant of the model-partitioning DP.
+
+    Same state space and transitions as the scalar DP; each state carries
+    the prefix's accumulated latency *and* energy and states compare by
+    ``obj.key``.  Energy is stage-additive: while one pipeline stage runs,
+    its resource draws active power and every *other* resource draws idle
+    power, so stage energy = active J + (Σ idle − own idle) × stage seconds
+    (identically the algebra of :func:`predicted_energy`, unrolled per
+    stage), plus the objective's radio term on wireless transfer seconds.
+
+    States are linked records ``(key, lat, en, j, s, prev)`` — each points
+    at its exact predecessor, so reconstruction replays the very chain whose
+    cost was reported.  Every cell keeps a small frontier: the best state by
+    ``obj.key`` *and* the best by raw latency.  Scalarized single-state DPs
+    can prune the only prefix that stays inside a ``latency_budget``; the
+    latency variant preserves the seed's latency-optimal chain end to end,
+    guaranteeing the search returns a within-budget plan whenever the
+    latency-optimal pipeline over these resources fits the budget.  (EDP is
+    additionally a prefix-scalarization heuristic — E×T is not
+    stage-separable.)
+    """
+    n, m = len(dag.blocks), len(res)
+    ecosters = [prov.segment_energy_coster(dag, r) for r in res]
+    idle_total = sum(r.idle_power for r in resources)
+
+    # state: (key, lat, en, j, s, prev_state); frontier per cell: state
+    # minimizing key and state minimizing latency (often the same object).
+    zero = (obj.key(0.0, 0.0), 0.0, 0.0, 0, 0, None)
+
+    def merge(frontier, state):
+        if frontier is None:
+            return (state, state)
+        by_key, by_lat = frontier
+        if state[0] < by_key[0]:
+            by_key = state
+        if state[1] < by_lat[1]:
+            by_lat = state
+        return (by_key, by_lat)
+
+    def states(frontier):
+        if frontier is None:
+            return ()
+        return frontier if frontier[0] is not frontier[1] else frontier[:1]
+
+    # dp[j][i]: frontier of states whose last stage ends at i on res j-1;
+    # best[j][i]: frontier over all dp[j'][i], j' <= j.
+    dp = [[None] * (n + 1) for _ in range(m + 1)]
+    best = [[None] * (n + 1) for _ in range(m + 1)]
+    for j in range(m + 1):
+        dp[j][0] = (zero, zero)
+        best[j][0] = (zero, zero)
+
+    for j in range(1, m + 1):
+        r = res[j - 1]
+        coster, ecoster = costers[j - 1], ecosters[j - 1]
+        idle_rest = idle_total - r.idle_power
+        for i in range(1, n + 1):
+            for s in range(i):
+                for prev in states(best[j - 1][s]):
+                    xfer = (dag.blocks[s].bytes_in if s > 0
+                            else dag.input_bytes)
+                    comm_s = prov.comm_time(xfer, r)
+                    lat_stage = comm_s + coster(s, i)
+                    en_stage = (prov.comm_energy(xfer, r) + ecoster(s, i)
+                                + obj.radio_power * comm_s)
+                    if weight_transfer and j > 1:
+                        wt = prov.comm_time(seg_params(s, i), r, rtt=0.0)
+                        lat_stage += wt
+                        en_stage += (prov.comm_energy(seg_params(s, i), r,
+                                                      rtt=0.0)
+                                     + obj.radio_power * wt)
+                    en_stage += idle_rest * lat_stage
+                    lat = prev[1] + lat_stage
+                    en = prev[2] + en_stage
+                    state = (obj.key(lat, en), lat, en, j, s, prev)
+                    dp[j][i] = merge(dp[j][i], state)
+            best[j][i] = best[j - 1][i]
+            for st in states(dp[j][i]):
+                best[j][i] = merge(best[j][i], st)
+
+    end_state, end_key = None, None
+    for j in range(1, m + 1):
+        r = res[j - 1]
+        t_out = prov.comm_time(dag.output_bytes, r)
+        e_out = (prov.comm_energy(dag.output_bytes, r)
+                 + obj.radio_power * t_out
+                 + (idle_total - r.idle_power) * t_out)
+        for st in states(dp[j][n]):
+            lat, en = st[1] + t_out, st[2] + e_out
+            key = obj.key(lat, en)
+            if end_key is None or key < end_key:
+                end_state, end_key = (st, lat), key
+    if end_state is None:
+        raise RuntimeError("model-partition DP found no feasible plan")
+
+    # Reconstruct by replaying the exact predecessor chain.
+    st, final_lat = end_state
+    cuts: list[int] = [n]
+    assign: list[int] = []
+    while st[5] is not None:                     # until the zero state
+        assign.append(order[st[3] - 1])
+        cuts.append(st[4])
+        st = st[5]
+    cuts.reverse()
+    assign.reverse()
+    return ModelPartition(boundaries=tuple(cuts), assignment=tuple(assign),
+                          predicted_latency=final_lat)
 
 
 # --------------------------------------------------------------------------
@@ -169,28 +307,43 @@ def _balanced_fractions(dag: ModelDAG, subset: Sequence[Resource],
 
 
 def partition_data(dag: ModelDAG, resources: Sequence[Resource],
-                   *, provider: CostProvider | None = None
-                   ) -> DataPartition:
+                   *, provider: CostProvider | None = None,
+                   objective: Objective | None = None) -> DataPartition:
     """Explore σ = 1..m sub-models over heterogeneity-ordered resources and
-    keep the fastest balanced split (Eq. 6).  Blocks that are not
+    keep the best balanced split (Eq. 6).  Blocks that are not
     data-splittable force σ = 1 (feasibility mask — e.g. recurrent decode
-    state, see DESIGN.md §4)."""
+    state, see DESIGN.md §4).
+
+    Each σ's split is water-filled so every participant finishes together
+    (the latency-optimal division for that subset); the *objective* then
+    chooses between subsets — under ``energy``/``edp`` a smaller σ that
+    keeps slow helpers idle (saving their active power and the shared
+    medium's radio energy) can beat the latency-optimal wide split."""
     prov = resolve_provider(provider)
+    obj = resolve_objective(objective)
     kind = dag.dominant_kind()
     order = sorted(range(len(resources)),
                    key=lambda i: -prov.effective_rate(resources[i], kind))
     if not all(b.data_splittable for b in dag.blocks):
         order = order[:1]
     best: DataPartition | None = None
+    best_en = float("inf")
     for sigma in range(1, len(order) + 1):
         subset_idx = order[:sigma]
         subset = [resources[i] for i in subset_idx]
         fr, t = _balanced_fractions(dag, subset, prov)
         if not fr:
             continue
-        if best is None or t < best.predicted_latency:
-            best = DataPartition(fractions=fr, assignment=tuple(subset_idx),
-                                 predicted_latency=t)
+        cand = DataPartition(fractions=fr, assignment=tuple(subset_idx),
+                             predicted_latency=t)
+        if obj.is_latency:
+            if best is None or t < best.predicted_latency:
+                best = cand
+            continue
+        en = predicted_energy(dag, resources, cand, prov,
+                              radio_power=obj.radio_power)
+        if best is None or obj.better(t, en, best.predicted_latency, best_en):
+            best, best_en = cand, en
     if best is None:
         raise RuntimeError("data-partition search found no feasible plan")
     return best
@@ -202,46 +355,86 @@ def partition_data(dag: ModelDAG, resources: Sequence[Resource],
 
 def partition(dag: ModelDAG, resources: Sequence[Resource],
               *, weight_transfer: bool = False,
-              provider: CostProvider | None = None) -> Partition:
-    """Θ ← min(Θ_ω, Θ_σ): run both searches, return the faster plan."""
+              provider: CostProvider | None = None,
+              objective: Objective | None = None) -> Partition:
+    """Θ ← best(Θ_ω, Θ_σ): run both searches, return the better plan.
+
+    With the default latency objective this is the paper's
+    ``Θ = min(Θ_ω, Θ_σ)`` verbatim (model wins ties, as in the seed); under
+    ``energy``/``edp`` both candidates are priced by
+    :func:`predicted_energy` and ``Objective.key`` decides — respecting the
+    latency budget when one is set."""
+    obj = resolve_objective(objective)
     theta_w = partition_model(dag, resources, weight_transfer=weight_transfer,
-                              provider=provider)
-    theta_s = partition_data(dag, resources, provider=provider)
-    if theta_w.predicted_latency <= theta_s.predicted_latency:
+                              provider=provider, objective=obj)
+    theta_s = partition_data(dag, resources, provider=provider, objective=obj)
+    if obj.is_latency:
+        if theta_w.predicted_latency <= theta_s.predicted_latency:
+            return theta_w
+        return theta_s
+    en_w = predicted_energy(dag, resources, theta_w, provider,
+                            radio_power=obj.radio_power)
+    en_s = predicted_energy(dag, resources, theta_s, provider,
+                            radio_power=obj.radio_power)
+    if obj.at_least_as_good(theta_w.predicted_latency, en_w,
+                            theta_s.predicted_latency, en_s):
         return theta_w
     return theta_s
 
 
 # --------------------------------------------------------------------------
-# Energy prediction for a plan (used by the simulator and benchmarks)
+# Energy prediction for a plan (used by the planners, simulator, benchmarks)
 # --------------------------------------------------------------------------
 
 def predicted_energy(dag: ModelDAG, resources: Sequence[Resource],
                      plan: Partition,
-                     provider: CostProvider | None = None) -> float:
-    """∫P dt with active power while a resource computes/communicates and idle
-    power for the rest of the plan's makespan."""
+                     provider: CostProvider | None = None,
+                     *, radio_power: float = 0.0) -> float:
+    """∫P dt for one plan: active power while a resource computes or
+    communicates, idle power for the rest of the plan's makespan.
+
+    The active joules come from the provider's energy queries, so a
+    calibrated provider prices them from *fitted* energy predictors while
+    the analytic provider reproduces the seed's ``active_power × busy``
+    algebra.  ``radio_power`` adds watts on total transfer seconds (the
+    shared-medium transmit energy the simulator meters); it defaults to 0 so
+    existing callers see the seed numerics unchanged."""
     prov = resolve_provider(provider)
     T = plan.predicted_latency
+    busy: dict[int, float] = {}
+    active: dict[int, float] = {}
+    comm_s = 0.0
     if isinstance(plan, ModelPartition):
-        busy = {}
         for si in range(plan.num_stages):
             a, b = plan.boundaries[si], plan.boundaries[si + 1]
-            r = resources[plan.assignment[si]]
+            ri = plan.assignment[si]
+            r = resources[ri]
             seg = dag.segment(a, b)
-            busy[plan.assignment[si]] = busy.get(plan.assignment[si], 0.0) + (
-                prov.compute_time(seg.flops, r, seg.kind)
-                + prov.comm_time(seg.bytes_in, r))
+            cm = prov.comm_time(seg.bytes_in, r)
+            busy[ri] = busy.get(ri, 0.0) + (
+                prov.compute_time(seg.flops, r, seg.kind) + cm)
+            active[ri] = active.get(ri, 0.0) + (
+                prov.compute_energy(seg.flops, r, seg.kind)
+                + prov.comm_energy(seg.bytes_in, r))
+            comm_s += cm
     else:
-        busy = {}
         kind = dag.dominant_kind()
         for f, ri in zip(plan.fractions, plan.assignment):
             r = resources[ri]
-            busy[ri] = (prov.compute_time(dag.total_flops * f, r, kind)
-                        + prov.comm_time(
-                            (dag.input_bytes + dag.output_bytes) * f, r))
+            nbytes = (dag.input_bytes + dag.output_bytes) * f
+            cm = prov.comm_time(nbytes, r)
+            busy[ri] = busy.get(ri, 0.0) + (
+                prov.compute_time(dag.total_flops * f, r, kind) + cm)
+            active[ri] = active.get(ri, 0.0) + (
+                prov.compute_energy(dag.total_flops * f, r, kind)
+                + prov.comm_energy(nbytes, r))
+            comm_s += cm
     e = 0.0
     for i, r in enumerate(resources):
-        b = min(busy.get(i, 0.0), T)
-        e += r.active_power * b + r.idle_power * max(T - b, 0.0)
-    return e
+        b = busy.get(i, 0.0)
+        ae = active.get(i, 0.0)
+        if b > T and b > 0.0:
+            ae *= T / b                   # clip active draw to the makespan
+            b = T
+        e += ae + r.idle_power * max(T - b, 0.0)
+    return e + radio_power * comm_s

@@ -247,6 +247,27 @@ def paper_cluster(n_nodes: int = 5) -> Cluster:
     return Cluster(nodes=all_nodes[:n_nodes])
 
 
+def battery_cluster(n_nodes: int = 5, idle_scale: float = 0.05) -> Cluster:
+    """The same boards deployed duty-cycled (battery/solar fleets with
+    aggressive sleep states): idle draw shrinks to ``idle_scale`` of the
+    wall-powered figures while active power is unchanged.
+
+    On the wall-powered :func:`paper_cluster`, static power dominates and
+    energy simply tracks latency (the paper: "lowest inference latency ...
+    also reflects in the lowest energy consumption") — so the
+    latency-optimal plan is already energy-optimal.  Duty-cycling breaks
+    that degeneracy: active joules dominate, and roping slow helpers into a
+    wide data split costs real energy for marginal speedup.  This is the
+    regime where ``Objective("energy")`` / ``Objective("edp")`` planning
+    pays off (see ``benchmarks/fig5_latency_energy.py --objective``)."""
+    base = paper_cluster(n_nodes)
+    return Cluster(nodes=tuple(
+        dataclasses.replace(n, processors=tuple(
+            dataclasses.replace(p, idle_power=p.idle_power * idle_scale)
+            for p in n.processors))
+        for n in base.nodes))
+
+
 # Per-model compute intensity δ [cycles/flop] — calibrates absolute latency to
 # the paper's Fig. 5 ranges (hundreds of ms).  Relative values follow each
 # model's arithmetic-intensity profile (EffNet's depthwise convs have the

@@ -14,6 +14,7 @@ from typing import Sequence
 from .cost_model import (Cluster, CostProvider, Node, Resource,
                          node_as_resource)
 from .dag import DataPartition, ModelDAG, ModelPartition, Partition
+from .objective import Objective
 from . import dp_partitioner
 
 
@@ -42,15 +43,24 @@ class GlobalPlan:
 def plan_global(dag: ModelDAG, cluster: Cluster, *, delta: float = 1.0,
                 weight_transfer: bool = False,
                 capacity: str = "sum",
-                provider: CostProvider | None = None) -> GlobalPlan:
+                provider: CostProvider | None = None,
+                objective: Objective | None = None) -> GlobalPlan:
+    """Tier-1 planning pass: collapse available nodes to (Λ_j, β_j)
+    Resources, run the DP at the given ``objective``, and map the winning
+    partition back onto nodes."""
     nodes = cluster.available_nodes()
     if not nodes:
         raise RuntimeError("no available nodes in cluster (A(N_φ) all-zero)")
     resources = [node_as_resource(n, delta, capacity=capacity) for n in nodes]
     plan = dp_partitioner.partition(dag, resources,
                                     weight_transfer=weight_transfer,
-                                    provider=provider)
-    energy = dp_partitioner.predicted_energy(dag, resources, plan, provider)
+                                    provider=provider, objective=objective)
+    # report energy with the objective's radio term so the figure quoted in
+    # GlobalPlan matches what the DP minimized (0 under the default
+    # objective — the seed algebra)
+    radio = objective.radio_power if objective is not None else 0.0
+    energy = dp_partitioner.predicted_energy(dag, resources, plan, provider,
+                                             radio_power=radio)
 
     assignments: list[GlobalAssignment] = []
     if isinstance(plan, ModelPartition):

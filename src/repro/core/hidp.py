@@ -23,6 +23,7 @@ from .cost_model import (Cluster, CostProvider, node_as_resource,
 from .dag import DataPartition, ModelDAG, ModelPartition
 from .global_partitioner import GlobalAssignment, GlobalPlan, plan_global
 from .local_partitioner import LocalPlan, p1_plan, plan_local
+from .objective import Objective
 
 
 def sub_dag_for(dag: ModelDAG, a: GlobalAssignment) -> ModelDAG:
@@ -61,54 +62,126 @@ class HiDPPlan:
 
 @dataclasses.dataclass(frozen=True)
 class PlannerConfig:
+    """Knobs for one :func:`plan` invocation.
+
+    Attributes:
+        delta: model compute-intensity [cycles/flop]; rescales datasheet
+            rates to the model's arithmetic profile.
+        weight_transfer: price cold-start weight shipping into model-mode
+            stage costs (steady-state serving keeps weights resident).
+        local_tier: False → global-only planning (the DisNet ablation).
+        p1_local: True → pin the local tier to the framework-default
+            single-processor behaviour (SoA config "P1").
+        node_capacity: ``"sum"`` (HiDP's Λ_j = Σλ_k) or ``"default"``
+            (what global-only strategies measure probing the default
+            runtime).
+        provider: cost predictions — None → the analytic datasheet model
+            (seed behaviour); a ``CalibratedCostProvider`` answers from the
+            profiling subsystem's fitted regressors (the paper's DNN Model
+            Analyzer).
+        objective: what both DP tiers minimize — None → latency (seed
+            behaviour); ``Objective("energy", latency_budget=...)`` or
+            ``Objective("edp")`` make energy a first-class planning goal.
+            The budget and radio term apply at the global tier; the local
+            tier minimizes the same metric via ``objective.local()``.
+    """
+
     delta: float = 1.0                 # model compute-intensity [cycles/flop]
     weight_transfer: bool = False      # cold-start weight shipping
     local_tier: bool = True            # False → global-only (ablation/DisNet)
     p1_local: bool = False             # True → SoA default local behaviour
     node_capacity: str = "sum"         # "sum" (HiDP) | "default" (SoA probe)
-    # Cost predictions: None → the analytic datasheet model (seed behaviour);
-    # a CalibratedCostProvider answers from the profiling subsystem's fitted
-    # regressors (the paper's DNN Model Analyzer).
     provider: CostProvider | None = None
+    objective: Objective | None = None
 
 
 def _hierarchical_cost(dag: ModelDAG, gp: GlobalPlan,
                        locals_: Sequence[LocalPlan],
-                       provider: CostProvider | None = None
+                       provider: CostProvider | None = None,
+                       objective: Objective | None = None
                        ) -> tuple[float, float]:
-    """Re-cost the global plan with tier-2 refined per-node latencies."""
+    """Re-cost the global plan with tier-2 refined per-node latencies.
+
+    Energy is the sum of the local plans' predictions plus the objective's
+    radio term on the inter-node transfer seconds priced here — keeping
+    ``HiDPPlan.predicted_energy`` consistent with the figure the global DP
+    minimized and with the simulator's radio-metered measurement (both
+    terms are zero under the default objective, the seed behaviour)."""
     prov = resolve_provider(provider)
+    radio = objective.radio_power if objective is not None else 0.0
     energy = sum(lp.predicted_energy for lp in locals_)
     if gp.mode == "model":
         total = 0.0
         for a, lp in zip(gp.assignments, locals_):
             r = node_as_resource(a.node)
             xfer = sub_dag_for(dag, a).input_bytes
-            total += prov.comm_time(xfer, r) + lp.predicted_latency
-        total += prov.comm_time(dag.output_bytes,
-                                node_as_resource(gp.assignments[-1].node),
-                                rtt=0.0)
+            comm_s = prov.comm_time(xfer, r)
+            total += comm_s + lp.predicted_latency
+            energy += radio * comm_s
+        out_s = prov.comm_time(dag.output_bytes,
+                               node_as_resource(gp.assignments[-1].node),
+                               rtt=0.0)
+        total += out_s
+        energy += radio * out_s
         return total, energy
     # data mode: concurrent, slowest node dominates
     per_node = []
     for a, lp in zip(gp.assignments, locals_):
         r = node_as_resource(a.node)
         sd = sub_dag_for(dag, a)
-        per_node.append(prov.comm_time(sd.input_bytes + sd.output_bytes, r)
-                        + lp.predicted_latency)
+        comm_s = prov.comm_time(sd.input_bytes + sd.output_bytes, r)
+        per_node.append(comm_s + lp.predicted_latency)
+        energy += radio * comm_s
     return max(per_node), energy
+
+
+def _local_objective(objective: Objective | None, gp: GlobalPlan,
+                     a: GlobalAssignment, sub_dag: ModelDAG,
+                     config: PlannerConfig,
+                     provider: CostProvider | None) -> Objective | None:
+    """Decompose a request-level latency budget into a per-node one.
+
+    The global tier booked ``sub_dag`` on this node at the optimistic
+    Λ_j = Σλ_k collapse; the local tier may spend that booking times the
+    request's slack ratio (budget / global predicted latency), but no more —
+    otherwise an unconstrained energy objective would happily pick a
+    low-power local split that blows the request budget a tier above."""
+    if objective is None:
+        return None
+    local = objective.local()
+    if objective.latency_budget is None:
+        return local
+    kind = sub_dag.dominant_kind()
+    r = node_as_resource(a.node, config.delta, kind,
+                         capacity=config.node_capacity)
+    prov = resolve_provider(provider)
+    booked = prov.compute_time(sub_dag.total_flops, r, kind)
+    slack = objective.latency_budget / max(gp.predicted_latency, 1e-12)
+    return dataclasses.replace(local,
+                               latency_budget=booked * max(slack, 1.0))
 
 
 def plan(dag: ModelDAG, cluster: Cluster,
          config: PlannerConfig = PlannerConfig()) -> HiDPPlan:
-    """Run the full two-tier HiDP planning pass for one request."""
+    """Run the full two-tier HiDP planning pass for one request.
+
+    Tier 1 (:func:`plan_global`) chooses the mode and node shares over the
+    available cluster; tier 2 (:func:`plan_local`) re-partitions each node's
+    sub-workload over its own processors.  Both tiers minimize
+    ``config.objective`` (latency by default) priced by ``config.provider``
+    (the analytic datasheet model by default).  The returned
+    :class:`HiDPPlan` carries the tier-2-refined latency *and* energy
+    predictions plus the planning overhead (paper: ~15 ms).
+    """
     t0 = time.perf_counter()
     provider = config.provider
     if provider is not None:
         provider = provider.at_delta(config.delta)
+    objective = config.objective
     gp = plan_global(dag, cluster, delta=config.delta,
                      weight_transfer=config.weight_transfer,
-                     capacity=config.node_capacity, provider=provider)
+                     capacity=config.node_capacity, provider=provider,
+                     objective=objective)
     locals_: list[LocalPlan] = []
     for a in gp.assignments:
         sd = sub_dag_for(dag, a)
@@ -117,8 +190,12 @@ def plan(dag: ModelDAG, cluster: Cluster,
                                    provider=provider))
         else:
             locals_.append(plan_local(sd, a.node, delta=config.delta,
-                                      provider=provider))
-    latency, energy = _hierarchical_cost(dag, gp, locals_, provider)
+                                      provider=provider,
+                                      objective=_local_objective(
+                                          objective, gp, a, sd, config,
+                                          provider)))
+    latency, energy = _hierarchical_cost(dag, gp, locals_, provider,
+                                         objective)
     dt = time.perf_counter() - t0
     return HiDPPlan(dag_name=dag.name, global_plan=gp,
                     local_plans=tuple(locals_), predicted_latency=latency,

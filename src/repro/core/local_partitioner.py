@@ -19,6 +19,7 @@ import dataclasses
 from .cost_model import (CostProvider, Node, Resource, resolve_provider,
                          processors_as_resources)
 from .dag import DataPartition, ModelDAG, ModelPartition, Partition
+from .objective import Objective, resolve_objective
 from . import dp_partitioner
 
 
@@ -38,10 +39,17 @@ def dominant_kind(dag: ModelDAG) -> str:
 
 
 def plan_local(sub_dag: ModelDAG, node: Node, *, delta: float = 1.0,
-               provider: CostProvider | None = None) -> LocalPlan:
+               provider: CostProvider | None = None,
+               objective: Objective | None = None) -> LocalPlan:
+    """Tier-2 planning pass: re-partition ``sub_dag`` over the node's own
+    processors with the same DP, minimizing ``objective.local()`` — the same
+    metric as the global tier, unconstrained and without the radio term
+    (intra-node links are DRAM copies, not wireless)."""
     kind = dominant_kind(sub_dag)
     resources = processors_as_resources(node, delta, kind)
-    plan = dp_partitioner.partition(sub_dag, resources, provider=provider)
+    obj = resolve_objective(objective).local()
+    plan = dp_partitioner.partition(sub_dag, resources, provider=provider,
+                                    objective=obj)
     energy = dp_partitioner.predicted_energy(sub_dag, resources, plan,
                                              provider)
     mode = "model" if isinstance(plan, ModelPartition) else "data"

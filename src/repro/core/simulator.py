@@ -23,6 +23,7 @@ from .cost_model import Cluster, CostProvider, Node, comm_time, \
 from .dag import DataPartition, ModelDAG, ModelPartition
 from .hidp import HiDPPlan, sub_dag_for
 from .local_partitioner import LocalPlan, dominant_kind
+from .objective import Objective
 
 
 @dataclasses.dataclass
@@ -31,6 +32,8 @@ class SimRequest:
     dag: ModelDAG
     arrival: float
     delta: float = 1.0
+    # Per-request planning objective; None inherits the simulator's default.
+    objective: Objective | None = None
 
 
 @dataclasses.dataclass
@@ -52,6 +55,10 @@ class RequestRecord:
     completion: float
     active_energy: float
     mode: str
+    # The plan's own predictions, kept so reports can hold the planner to
+    # account against what the (possibly diverging) hardware actually did.
+    predicted_latency: float = 0.0
+    predicted_energy: float = 0.0
 
     @property
     def latency(self) -> float:
@@ -74,13 +81,49 @@ class SimReport:
     def energies(self) -> dict[str, float]:
         """Per-request energy: active shard energy + cluster idle power over
         the request's latency window (the paper's whole-cluster metering)."""
-        idle_w = sum(p.idle_power for n in self.cluster.nodes
-                     for p in n.processors)
+        idle_w = self._idle_watts()
         out: dict[str, list[float]] = {}
         for r in self.records:
             e = r.active_energy + idle_w * r.latency
             out.setdefault(r.dag_name, []).append(e)
         return {k: sum(v) / len(v) for k, v in out.items()}
+
+    def _idle_watts(self) -> float:
+        return sum(p.idle_power for n in self.cluster.nodes
+                   for p in n.processors)
+
+    def predicted_energies(self) -> dict[str, float]:
+        """Planner-predicted per-request energy, normalized like
+        :meth:`energies` (plan energy + cluster idle over the predicted
+        latency window) so the two are directly comparable."""
+        idle_w = self._idle_watts()
+        out: dict[str, list[float]] = {}
+        for r in self.records:
+            e = r.predicted_energy + idle_w * r.predicted_latency
+            out.setdefault(r.dag_name, []).append(e)
+        return {k: sum(v) / len(v) for k, v in out.items()}
+
+    def prediction_error(self) -> dict[str, float]:
+        """Mean relative |predicted − measured| for latency and energy,
+        across all requests — the ground-truth scoreboard a FeedbackLoop's
+        drift detection acts on.  Approximate by construction (the plan's
+        energy counts participating-node idle inside its own window; the
+        measured side meters the whole cluster) but near zero whenever
+        execution matches the cost model, and large when the hardware
+        diverges."""
+        idle_w = self._idle_watts()
+        lat_errs, en_errs = [], []
+        for r in self.records:
+            if r.predicted_latency > 0:
+                lat_errs.append(abs(r.predicted_latency - r.latency)
+                                / max(r.latency, 1e-12))
+            measured = r.active_energy + idle_w * r.latency
+            predicted = r.predicted_energy + idle_w * r.predicted_latency
+            if predicted > 0:
+                en_errs.append(abs(predicted - measured)
+                               / max(measured, 1e-12))
+        mean = lambda xs: sum(xs) / len(xs) if xs else 0.0  # noqa: E731
+        return {"latency": mean(lat_errs), "energy": mean(en_errs)}
 
     def makespan(self) -> float:
         return max((r.completion for r in self.records), default=0.0)
@@ -104,16 +147,21 @@ class SimReport:
 class EdgeSimulator:
     """``provider`` feeds the *planner* (what the strategy believes about the
     hardware); ``ground_truth`` governs *execution* (what the hardware
-    actually does — a ``repro.profiling.SyntheticGroundTruth``).  Leaving both
-    None reproduces the seed behaviour exactly: planning and execution share
-    the analytic datasheet model, so predictions are perfect.  ``feedback``
-    (a ``repro.profiling.FeedbackLoop``) receives one observation per
-    executed compute shard — the run-time scheduler's measured latencies."""
+    actually does — a ``repro.profiling.SyntheticGroundTruth``, whose
+    ``rate_scale`` shifts timing and ``power_scale`` shifts measured watts).
+    Leaving both None reproduces the seed behaviour exactly: planning and
+    execution share the analytic datasheet model, so predictions are perfect.
+    ``feedback`` (a ``repro.profiling.FeedbackLoop``) receives one
+    observation per executed compute shard — the run-time scheduler's
+    measured latencies *and joules*, so both latency and energy drift are
+    caught.  ``objective`` sets the default planning objective for every
+    request; a ``SimRequest.objective`` overrides it per request."""
 
     def __init__(self, cluster: Cluster, strategy: str | Strategy = "hidp",
                  leader: str | None = None,
                  provider: CostProvider | None = None,
-                 ground_truth=None, feedback=None):
+                 ground_truth=None, feedback=None,
+                 objective: Objective | None = None):
         self.cluster = cluster
         self.strategy: Strategy = (STRATEGIES[strategy]
                                    if isinstance(strategy, str) else strategy)
@@ -121,6 +169,7 @@ class EdgeSimulator:
         self.provider = provider
         self.ground_truth = ground_truth
         self.feedback = feedback
+        self.objective = objective
         # capacity-1 resources
         self.proc_busy: dict[tuple[str, str], float] = {}
         self.medium_busy: float = 0.0
@@ -160,14 +209,24 @@ class EdgeSimulator:
         return self.ground_truth.compute_seconds(
             node.name, node.processors[proc_idx].name, flops, kind, delta)
 
+    def _active_watts(self, node: Node, proc_idx: int) -> float:
+        """Watts a shard actually draws: datasheet unless the ground truth
+        declares a diverging power model."""
+        proc = node.processors[proc_idx]
+        gt = self.ground_truth
+        if gt is not None and hasattr(gt, "active_watts"):
+            return gt.active_watts(node.name, proc.name)
+        return proc.active_power
+
     def _observe(self, node: Node, proc_idx: int, flops: float,
                  nbytes: float, kind: str, delta: float,
-                 measured: float) -> None:
+                 measured: float, joules: float) -> None:
         """Report one executed shard to the feedback loop (run-time scheduler
         measurements re-entering the Model Analyzer)."""
         if self.feedback is not None and flops > 0:
             key = f"{node.name}/{node.processors[proc_idx].name}"
-            self.feedback.observe(key, kind, flops * delta, nbytes, measured)
+            self.feedback.observe(key, kind, flops * delta, nbytes, measured,
+                                  energy_j=joules if joules > 0 else None)
 
     def _run_local(self, sub: ModelDAG, node: Node, lp: LocalPlan,
                    ready: float, delta: float, rid: int
@@ -186,13 +245,14 @@ class EdgeSimulator:
                 r = resources[ri]
                 compute = self._compute_seconds(node, ri, seg.flops, r.rate,
                                                 kind, delta)
+                watts = self._active_watts(node, ri)
                 dur = comm_time(seg.bytes_in, r.bw, r.rtt) + compute
                 proc = node.processors[ri].name
                 t = self._reserve_proc(node.name, proc, t, dur, seg.flops,
-                                       r.active_power, rid)
-                energy += r.active_power * dur
+                                       watts, rid)
+                energy += watts * dur
                 self._observe(node, ri, seg.flops, seg.bytes_in, kind, delta,
-                              compute)
+                              compute, watts * compute)
             return t, energy
         assert isinstance(part, DataPartition)
         done = ready
@@ -200,25 +260,29 @@ class EdgeSimulator:
             r = resources[ri]
             compute = self._compute_seconds(node, ri, sub.total_flops * f,
                                             r.rate, kind, delta)
+            watts = self._active_watts(node, ri)
             dur = comm_time((sub.input_bytes + sub.output_bytes) * f,
                             r.bw, r.rtt) + compute
             proc = node.processors[ri].name
             end = self._reserve_proc(node.name, proc, ready, dur,
-                                     sub.total_flops * f, r.active_power, rid)
-            energy += r.active_power * dur
+                                     sub.total_flops * f, watts, rid)
+            energy += watts * dur
             self._observe(node, ri, sub.total_flops * f,
                           (sub.input_bytes + sub.output_bytes) * f, kind,
-                          delta, compute)
+                          delta, compute, watts * compute)
             done = max(done, end)
         return done, energy
 
     # ----------------------------------------------------------- one request
     def _run_request(self, req: SimRequest) -> RequestRecord:
-        if self.provider is None:
-            plan: HiDPPlan = self.strategy(req.dag, self.cluster, req.delta)
-        else:
-            plan = self.strategy(req.dag, self.cluster, req.delta,
-                                 provider=self.provider)
+        kwargs = {}
+        if self.provider is not None:
+            kwargs["provider"] = self.provider
+        objective = req.objective or self.objective
+        if objective is not None:
+            kwargs["objective"] = objective
+        plan: HiDPPlan = self.strategy(req.dag, self.cluster, req.delta,
+                                       **kwargs)
         t = req.arrival + plan.planning_seconds      # DP overhead (~15 ms)
         gp = plan.global_plan
         energy = 0.0
@@ -272,7 +336,9 @@ class EdgeSimulator:
         energy += self.radio_energy - radio0
         return RequestRecord(request_id=req.request_id, dag_name=req.dag.name,
                              arrival=req.arrival, completion=t,
-                             active_energy=energy, mode=gp.mode)
+                             active_energy=energy, mode=gp.mode,
+                             predicted_latency=plan.predicted_latency,
+                             predicted_energy=plan.predicted_energy)
 
     # ------------------------------------------------------------------ drive
     def run(self, requests: Sequence[SimRequest]) -> SimReport:
@@ -285,9 +351,11 @@ class EdgeSimulator:
 def simulate(cluster: Cluster, strategy: str | Strategy,
              workload: Iterable[tuple[float, ModelDAG, float]],
              *, provider: CostProvider | None = None,
-             ground_truth=None, feedback=None) -> SimReport:
+             ground_truth=None, feedback=None,
+             objective: Objective | None = None) -> SimReport:
     sim = EdgeSimulator(cluster, strategy, provider=provider,
-                        ground_truth=ground_truth, feedback=feedback)
+                        ground_truth=ground_truth, feedback=feedback,
+                        objective=objective)
     reqs = [SimRequest(i, dag, t, delta)
             for i, (t, dag, delta) in enumerate(workload)]
     return sim.run(reqs)

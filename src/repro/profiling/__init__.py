@@ -9,7 +9,10 @@ Closed loop with the rest of the stack:
     measured shard latencies     │ EWMA blend + drift-triggered refit
     (simulator / serving) ──▶  FeedbackLoop  ──on_drift──▶  re-plan (elastic)
 
-See docs/profiling.md for the mapping onto the paper's Fig. 4 FSM.
+Samples carry both seconds and joules; the model fits latency *and* energy
+predictors per (kind × processor), and the loop watches both for drift.
+See docs/profiling.md for the mapping onto the paper's Fig. 4 FSM and
+docs/energy.md for the energy objective built on the fitted predictors.
 """
 
 from .learned import LearnedCostModel, Sample  # noqa: F401

@@ -1,8 +1,8 @@
 """LearnedCostModel — the regression half of the paper's DNN Model Analyzer.
 
 The paper fits random-forest predictors mapping block features to per-block
-latency/energy on each processor class.  We keep the *role* (measured
-samples in, per-(block-kind × processor) latency predictions out) with two
+latency **and energy** on each processor class.  We keep the *role* (measured
+samples in, per-(block-kind × processor) predictions out) with two
 dependency-free regressors:
 
 * ``linear``   — non-negative least squares over (work, traffic, 1), where
@@ -15,6 +15,13 @@ dependency-free regressors:
                  whose latency curve is monotone but not affine (cache
                  cliffs, DVFS steps).  Predictions interpolate the fitted
                  step curve and extrapolate proportionally.
+
+Energy predictors reuse the same machinery: every ``Sample`` carrying
+``energy_j > 0`` contributes to a per-(key × kind) *energy* entry fitted
+over (work, traffic, 1) exactly like latency — the marginal d energy/d work
+is the processor's measured joules-per-flop, the quantity the analytic
+model derives as ``active_power / rate``.  Latency and energy entries
+serialize, EWMA-blend, and fall back identically.
 
 Models serialize to/from JSON so a ``CalibrationStore`` can version them per
 cluster fingerprint, and support EWMA blending of online observations (the
@@ -108,18 +115,29 @@ def _pava(x: np.ndarray, y: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
 
 
 class LearnedCostModel:
-    """Per-(key × kind) latency predictors fitted from ProfileSamples."""
+    """Per-(key × kind) latency *and energy* predictors fitted from
+    ProfileSamples.
+
+    ``entries`` maps (key, kind) → latency predictor (seconds);
+    ``energy_entries`` maps (key, kind) → energy predictor (joules).  Both
+    are :class:`_Entry` instances fitted by the same NNLS/isotonic
+    machinery, so everything said about latency fitting, fallback, EWMA
+    blending, and serialization holds for energy too.
+    """
 
     def __init__(self, mode: str = "linear"):
         if mode not in ("linear", "isotonic"):
             raise ValueError(mode)
         self.mode = mode
         self.entries: dict[tuple[str, str], _Entry] = {}
+        self.energy_entries: dict[tuple[str, str], _Entry] = {}
 
     # ------------------------------------------------------------------- fit
     @classmethod
     def fit(cls, samples: Iterable[Sample],
             mode: str = "linear") -> "LearnedCostModel":
+        """Fit latency predictors for every (key × kind) group, and energy
+        predictors for every group whose samples carry ``energy_j``."""
         model = cls(mode=mode)
         groups: dict[tuple[str, str], list[Sample]] = {}
         for s in samples:
@@ -127,11 +145,25 @@ class LearnedCostModel:
         for (key, kind), group in sorted(groups.items()):
             model.fit_entry(key, kind,
                             [(s.work, s.traffic, s.latency_s) for s in group])
+            energy_rows = [(s.work, s.traffic, s.energy_j)
+                           for s in group if s.energy_j > 0]
+            if energy_rows:
+                model.fit_energy_entry(key, kind, energy_rows)
         return model
 
     def fit_entry(self, key: str, kind: str,
                   rows: Sequence[tuple[float, float, float]]) -> None:
-        """(Re)fit one predictor from (work, traffic, latency) rows."""
+        """(Re)fit one latency predictor from (work, traffic, latency) rows."""
+        self.entries[(key, kind)] = self._fit_rows(key, kind, rows)
+
+    def fit_energy_entry(self, key: str, kind: str,
+                         rows: Sequence[tuple[float, float, float]]) -> None:
+        """(Re)fit one energy predictor from (work, traffic, joules) rows —
+        the same regression as latency with joules as the response."""
+        self.energy_entries[(key, kind)] = self._fit_rows(key, kind, rows)
+
+    def _fit_rows(self, key: str, kind: str,
+                  rows: Sequence[tuple[float, float, float]]) -> _Entry:
         arr = np.asarray(rows, dtype=float)
         if arr.ndim != 2 or arr.shape[0] == 0:
             raise ValueError(f"no samples for ({key}, {kind})")
@@ -172,18 +204,29 @@ class LearnedCostModel:
             xs, ys = _pava(work, lat)
             entry.iso_x, entry.iso_y = tuple(map(float, xs)), tuple(
                 map(float, ys))
-        self.entries[(key, kind)] = entry
+        return entry
 
     # --------------------------------------------------------------- queries
-    def _entry_for(self, key: str, kind: str) -> _Entry | None:
-        e = self.entries.get((key, kind))
+    @staticmethod
+    def _lookup(table: dict[tuple[str, str], _Entry], key: str,
+                kind: str) -> _Entry | None:
+        e = table.get((key, kind))
         if e is None:
-            e = self.entries.get((key, "generic"))
+            e = table.get((key, "generic"))
         return e
 
+    def _entry_for(self, key: str, kind: str) -> _Entry | None:
+        return self._lookup(self.entries, key, kind)
+
     def entry(self, key: str, kind: str) -> _Entry | None:
-        """The fitted predictor serving (key, kind), with generic fallback."""
+        """The fitted latency predictor serving (key, kind), with generic
+        fallback."""
         return self._entry_for(key, kind)
+
+    def energy_entry(self, key: str, kind: str) -> _Entry | None:
+        """The fitted energy predictor serving (key, kind), with generic
+        fallback."""
+        return self._lookup(self.energy_entries, key, kind)
 
     def rate(self, key: str, kind: str = "generic") -> float | None:
         """Measured work-units/s (δ=1 FLOP/s).  Node keys aggregate their
@@ -206,6 +249,9 @@ class LearnedCostModel:
         if e is None:
             r = self.rate(key, kind)      # node-level aggregation
             return None if r is None else work / max(r, 1e-300)
+        return self._evaluate(e, work, traffic)
+
+    def _evaluate(self, e: _Entry, work: float, traffic: float) -> float:
         if self.mode == "isotonic" and e.iso_x:
             x, y = e.iso_x, e.iso_y
             if work >= x[-1]:
@@ -214,6 +260,34 @@ class LearnedCostModel:
                 return y[0] * (work / x[0]) if x[0] > 0 else y[0]
             return float(np.interp(work, x, y))
         return e.linear(work, traffic)
+
+    def predict_energy(self, key: str, kind: str, work: float,
+                       traffic: float = 0.0) -> float | None:
+        """Predicted active energy in joules, or None when uncalibrated.
+
+        Node keys aggregate their processors: the work splits across the
+        fitted children in proportion to their measured rates (the share
+        each realises under Λ_j = Σ_k λ_k) and each share is priced by the
+        child's energy predictor."""
+        e = self.energy_entry(key, kind)
+        if e is not None:
+            return self._evaluate(e, work, traffic)
+        prefix = key + "/"
+        children = sorted({k for (k, _) in self.energy_entries
+                           if k.startswith(prefix)})
+        shares = [(c, self.rate(c, kind)) for c in children]
+        shares = [(c, r) for c, r in shares if r is not None]
+        total = sum(r for _, r in shares)
+        if not shares or total <= 0:
+            return None
+        joules = 0.0
+        for c, r in shares:
+            p = self.predict_energy(c, kind, work * r / total,
+                                    traffic * r / total)
+            if p is None:
+                return None
+            joules += p
+        return joules
 
     # ------------------------------------------------------ online blending
     def observe(self, key: str, kind: str, work: float, traffic: float,
@@ -237,29 +311,54 @@ class LearnedCostModel:
             blend = (1.0 - alpha) + alpha * scale
             e.iso_y = tuple(v * blend for v in e.iso_y)
 
+    def observe_energy(self, key: str, kind: str, work: float, traffic: float,
+                       energy_j: float, alpha: float = 0.3) -> None:
+        """EWMA-blend one measured execution's joules into the fitted
+        marginal energy — the energy twin of :meth:`observe`."""
+        if work <= 0 or energy_j <= 0:
+            return
+        e = self.energy_entries.get((key, kind))
+        if e is None:
+            self.energy_entries[(key, kind)] = _Entry(
+                a=energy_j / work, b=0.0, c=0.0, n=1)
+            return
+        resid = max(energy_j - e.b * traffic - e.c, 1e-12)
+        implied_a = resid / work
+        e.a = (1.0 - alpha) * e.a + alpha * implied_a
+        e.n += 1
+        if e.iso_x:
+            scale = implied_a / max(e.a, 1e-300)
+            blend = (1.0 - alpha) + alpha * scale
+            e.iso_y = tuple(v * blend for v in e.iso_y)
+
     # --------------------------------------------------------- serialization
     def to_json(self) -> str:
         return json.dumps(self.to_dict(), sort_keys=True)
 
     def to_dict(self) -> dict:
+        def table(entries: dict[tuple[str, str], _Entry]) -> dict:
+            return {f"{key}|{kind}": dataclasses.asdict(e)
+                    for (key, kind), e in sorted(entries.items())}
         return {
             "mode": self.mode,
-            "entries": {
-                f"{key}|{kind}": dataclasses.asdict(e)
-                for (key, kind), e in sorted(self.entries.items())
-            },
+            "entries": table(self.entries),
+            "energy_entries": table(self.energy_entries),
         }
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "LearnedCostModel":
         model = cls(mode=d.get("mode", "linear"))
-        for joint, ed in d.get("entries", {}).items():
-            key, _, kind = joint.rpartition("|")
-            model.entries[(key, kind)] = _Entry(
-                a=ed["a"], b=ed["b"], c=ed["c"], n=ed.get("n", 0),
-                mape=ed.get("mape", 0.0),
-                iso_x=tuple(ed.get("iso_x", ())),
-                iso_y=tuple(ed.get("iso_y", ())))
+
+        def load(table: Mapping, into: dict) -> None:
+            for joint, ed in table.items():
+                key, _, kind = joint.rpartition("|")
+                into[(key, kind)] = _Entry(
+                    a=ed["a"], b=ed["b"], c=ed["c"], n=ed.get("n", 0),
+                    mape=ed.get("mape", 0.0),
+                    iso_x=tuple(ed.get("iso_x", ())),
+                    iso_y=tuple(ed.get("iso_y", ())))
+        load(d.get("entries", {}), model.entries)
+        load(d.get("energy_entries", {}), model.energy_entries)
         return model
 
     @classmethod
@@ -268,10 +367,22 @@ class LearnedCostModel:
 
     # ------------------------------------------------------------ diagnostics
     def mape_against(self, samples: Iterable[Sample]) -> float:
-        """Mean absolute percentage error of this model over samples."""
+        """Mean absolute percentage latency error of this model over samples."""
         errs = []
         for s in samples:
             p = self.predict(s.key, s.kind, s.work, s.traffic)
             if p is not None:
                 errs.append(abs(p - s.latency_s) / max(s.latency_s, 1e-12))
+        return float(np.mean(errs)) if errs else float("nan")
+
+    def energy_mape_against(self, samples: Iterable[Sample]) -> float:
+        """Mean absolute percentage energy error over samples carrying
+        ``energy_j``."""
+        errs = []
+        for s in samples:
+            if s.energy_j <= 0:
+                continue
+            p = self.predict_energy(s.key, s.kind, s.work, s.traffic)
+            if p is not None:
+                errs.append(abs(p - s.energy_j) / max(s.energy_j, 1e-12))
         return float(np.mean(errs)) if errs else float("nan")

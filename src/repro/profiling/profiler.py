@@ -46,7 +46,10 @@ class SyntheticGroundTruth:
 
     ``rate_scale`` maps ``(node_name, proc_name)`` (or ``node_name`` for the
     whole node) to a multiplier on the analytic rate: 0.4 means the processor
-    sustains 40% of what the cost model believes.  ``mem_bw`` and
+    sustains 40% of what the cost model believes.  ``power_scale`` does the
+    same for active power draw: 1.5 means the processor really burns 1.5× its
+    datasheet active watts (DVFS residency, rail losses, a mis-declared TDP)
+    — the divergence the energy predictors exist to learn.  ``mem_bw`` and
     ``overhead_s`` add the memory-traffic and fixed-launch terms real
     measurements contain; ``noise`` is the relative jitter σ applied by
     ``sample_seconds`` (deterministic under a caller-provided rng).
@@ -54,6 +57,8 @@ class SyntheticGroundTruth:
 
     cluster: Cluster
     rate_scale: Mapping[str, float] | Mapping[tuple[str, str], float] = \
+        dataclasses.field(default_factory=dict)
+    power_scale: Mapping[str, float] | Mapping[tuple[str, str], float] = \
         dataclasses.field(default_factory=dict)
     mem_bw: float = 12e9
     overhead_s: float = 2e-4
@@ -67,11 +72,21 @@ class SyntheticGroundTruth:
                         return n, p
         raise KeyError(f"{node_name}/{proc_name}")
 
-    def scale(self, node_name: str, proc_name: str) -> float:
-        rs = dict(self.rate_scale)
+    @staticmethod
+    def _scale_from(table: Mapping, node_name: str, proc_name: str) -> float:
+        rs = dict(table)
         return rs.get((node_name, proc_name),
                       rs.get(f"{node_name}/{proc_name}",
                              rs.get(node_name, 1.0)))
+
+    def scale(self, node_name: str, proc_name: str) -> float:
+        return self._scale_from(self.rate_scale, node_name, proc_name)
+
+    def active_watts(self, node_name: str, proc_name: str) -> float:
+        """The active power the hardware actually draws (W)."""
+        _, p = self._proc(node_name, proc_name)
+        return p.active_power * self._scale_from(self.power_scale,
+                                                 node_name, proc_name)
 
     def rate(self, node_name: str, proc_name: str, kind: str,
              delta: float) -> float:
@@ -153,7 +168,8 @@ class Profiler:
                             work=block.flops * delta,
                             traffic=block_traffic(block),
                             latency_s=lat,
-                            energy_j=lat * proc.active_power))
+                            energy_j=lat * gt.active_watts(node.name,
+                                                           proc.name)))
         return samples
 
     # ------------------------------------------------------- real kernels

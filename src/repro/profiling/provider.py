@@ -2,10 +2,11 @@
 ``CostProvider`` protocol.
 
 Drop-in for the analytic provider everywhere the DP partitioners price
-compute: segment costs come from per-block regressor predictions (prefix
-summed, so the DP's inner loop stays O(1)); scalar compute/rate queries come
-from fitted marginal rates.  Communication stays analytic — link bandwidths
-are declared, not discovered, in this reproduction.
+compute *and energy*: segment costs come from per-block regressor
+predictions (prefix summed, so the DP's inner loop stays O(1)); scalar
+compute/rate/energy queries come from fitted marginals.  Communication stays
+analytic — link bandwidths are declared, not discovered, in this
+reproduction.
 
 Any (resource × kind) the model has never seen falls back to the analytic
 provider, so a partially-calibrated cluster still plans everywhere.
@@ -76,6 +77,51 @@ class CalibratedCostProvider:
         pre = [0.0]
         for b in dag.blocks:
             pre.append(pre[-1] + self.block_time(resource, b))
+
+        def cost(a: int, b: int) -> float:
+            return pre[b] - pre[a]
+
+        return cost
+
+    # ------------------------------------------------------------- energy
+    # Fitted energy predictors answer first; a (resource × kind) without one
+    # degrades gracefully to datasheet power × *calibrated* seconds (better
+    # than fully-analytic: the time half is still measured), and a fully
+    # unknown resource bottoms out at the analytic provider.
+
+    def energy(self, flops: float, nbytes: float, resource: Resource,
+               kind: str = "generic") -> float:
+        return (self.compute_energy(flops, resource, kind)
+                + self.comm_energy(nbytes, resource))
+
+    def compute_energy(self, flops: float, resource: Resource,
+                       kind: str = "generic") -> float:
+        p = self.model.predict_energy(self._key(resource), kind,
+                                      flops * self.delta)
+        if p is None:
+            return resource.active_power * self.compute_time(flops, resource,
+                                                             kind)
+        return p
+
+    def comm_energy(self, nbytes: float, resource: Resource,
+                    rtt: float | None = None) -> float:
+        """Link energy stays analytic, like the comm latencies it prices."""
+        return self.fallback.comm_energy(nbytes, resource, rtt)
+
+    def block_energy(self, resource: Resource, block) -> float:
+        p = self.model.predict_energy(self._key(resource), block.kind,
+                                      block.flops * self.delta,
+                                      block_traffic(block))
+        if p is None:
+            return resource.active_power * self.block_time(resource, block)
+        return p
+
+    def segment_energy_coster(self, dag: ModelDAG, resource: Resource
+                              ) -> Callable[[int, int], float]:
+        """Prefix sums of per-block energy predictions → O(1) segment J."""
+        pre = [0.0]
+        for b in dag.blocks:
+            pre.append(pre[-1] + self.block_energy(resource, b))
 
         def cost(a: int, b: int) -> float:
             return pre[b] - pre[a]

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.objective import METRICS
 from repro.core.scheduler import State
 from repro.models.model import Model
 
@@ -32,6 +33,9 @@ class Request:
     prompt: np.ndarray                  # (P,) int32
     max_new_tokens: int = 16
     eos_id: int | None = None
+    # what this request asks the planner to minimize when (re-)planning:
+    # "latency" | "energy" | "edp" (an Objective's metric name)
+    objective: str = "latency"
     # filled during serving
     slot: int | None = None
     generated: list[int] = dataclasses.field(default_factory=list)
@@ -44,7 +48,15 @@ class ServingEngine:
     latency is reported as an observation keyed ``engine/decode``; when the
     loop flags drift the engine re-enters EXPLORE (traced, counted in
     ``replans``) and calls ``on_replan`` — typically
-    ``ElasticController.on_drift`` or a fresh HiDP planning pass."""
+    ``ElasticController.on_drift`` or a fresh HiDP planning pass.
+
+    Requests carry a per-request planning *objective* (``"latency"`` |
+    ``"energy"`` | ``"edp"``, see ``repro.core.Objective``): the engine
+    itself executes whatever plan it is given, but it tracks what the
+    in-flight traffic asked for and exposes :meth:`dominant_objective` so an
+    ``on_replan`` callback can hand the right ``Objective`` to the next
+    planning pass (e.g. battery-saver clients requesting ``energy`` flip the
+    fleet to energy-optimal plans once they dominate the batch)."""
 
     def __init__(self, model: Model, params: dict, *, max_batch: int = 4,
                  max_len: int = 128, plan=None, donate: bool = True,
@@ -74,15 +86,34 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ API
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               eos_id: int | None = None) -> int:
+               eos_id: int | None = None,
+               objective: str = "latency") -> int:
+        """Queue one request.  ``objective`` names the planning metric this
+        request wants (``"latency"`` | ``"energy"`` | ``"edp"``)."""
+        if objective not in METRICS:
+            raise ValueError(f"unknown objective {objective!r}; "
+                             f"expected one of {METRICS}")
         rid = self._next_id
         self._next_id += 1
         self.queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                  max_new_tokens, eos_id))
+                                  max_new_tokens, eos_id,
+                                  objective=objective))
         return rid
 
     def active(self) -> int:
         return sum(r is not None for r in self.slot_req)
+
+    def dominant_objective(self) -> str:
+        """The most-requested objective among queued + in-flight requests
+        (ties break latency > energy > edp; empty engine → "latency") — what
+        an ``on_replan`` callback should hand the next planning pass."""
+        counts = {"latency": 0, "energy": 0, "edp": 0}
+        for r in self.queue:
+            counts[r.objective] += 1
+        for r in self.slot_req:
+            if r is not None:
+                counts[r.objective] += 1
+        return max(counts, key=counts.get)
 
     def run_until_done(self, max_steps: int = 10_000) -> dict[int, Request]:
         for _ in range(max_steps):

@@ -1,0 +1,344 @@
+"""Energy-aware planning end-to-end: fitted energy predictors, the
+latency/energy/EDP Objective through both DP tiers, ground-truth energy
+metering in the simulator, and energy-drift detection in the feedback loop.
+
+Also the regression guarantees: the analytic provider's energy queries
+reproduce the seed's ``active_power × latency`` algebra, and the default
+(latency) objective plans bit-identically to the seed.
+"""
+
+import math
+
+import pytest
+
+from repro.core import (LATENCY, Objective, PlannerConfig, plan,
+                        resolve_objective, simulate)
+from repro.core.cost_model import ANALYTIC, Resource, node_as_resource
+from repro.core.dp_partitioner import (partition, partition_data,
+                                       partition_model, predicted_energy)
+from repro.core.edge_models import (EDGE_MODELS, MODEL_DELTA, battery_cluster,
+                                    paper_cluster)
+from repro.profiling import (CalibratedCostProvider, CalibrationStore,
+                             FeedbackLoop, LearnedCostModel, Profiler,
+                             Sample, SyntheticGroundTruth, calibrate)
+
+
+def profiled_samples(gt=None, seed=0):
+    cluster = paper_cluster()
+    dags = {k: f() for k, f in EDGE_MODELS.items()}
+    return cluster, Profiler(seed=seed).profile_cluster(
+        cluster, dags, MODEL_DELTA, ground_truth=gt)
+
+
+# --------------------------------------------------------------------------
+# Objective semantics
+# --------------------------------------------------------------------------
+
+def test_objective_validation_and_parse():
+    with pytest.raises(ValueError):
+        Objective("throughput")
+    with pytest.raises(ValueError):
+        Objective("energy", latency_budget=-1.0)
+    o = Objective.parse("edp@0.5")
+    assert (o.metric, o.latency_budget) == ("edp", 0.5)
+    assert Objective.parse("energy").latency_budget is None
+    assert resolve_objective(None) is LATENCY
+    assert LATENCY.is_latency and not Objective("energy").is_latency
+
+
+def test_edp_tie_breaking():
+    """Equal E×T products: lower energy wins, then lower latency."""
+    edp = Objective("edp")
+    # (lat, en) with identical products 1.0
+    assert edp.better(2.0, 0.5, 0.5, 2.0)          # lower energy wins
+    assert not edp.better(0.5, 2.0, 2.0, 0.5)
+    # equal product *and* equal energy → lower latency breaks the tie
+    assert edp.key(1.0, 1.0) < edp.key(1.0 + 1e-12, 1.0)
+    assert edp.better(1.0, 1.0, 2.0, 1.0)           # lower E×T outright
+    # feasibility dominates the metric entirely
+    bounded = Objective("edp", latency_budget=1.0)
+    assert bounded.better(1.0, 100.0, 1.1, 0.001)   # only a is within budget
+
+
+def test_latency_objective_budget_feasibility():
+    o = Objective("energy", latency_budget=1.0)
+    # infeasible plans compare by latency (drive toward feasibility)
+    assert o.better(1.5, 1.0, 2.0, 0.1)
+    # feasible always beats infeasible
+    assert o.better(0.9, 100.0, 1.01, 0.1)
+    # local() keeps the budget but strips the radio term
+    loc = Objective("energy", latency_budget=2.0, radio_power=4.0).local()
+    assert loc.latency_budget == 2.0 and loc.radio_power == 0.0
+
+
+# --------------------------------------------------------------------------
+# Seed-numerics regressions
+# --------------------------------------------------------------------------
+
+def test_analytic_energy_is_power_times_latency():
+    r = Resource(name="r", rate=1e11, bw=1e8, rtt=2e-3,
+                 active_power=7.5, idle_power=2.0)
+    flops, nbytes = 3.3e9, 4.7e6
+    assert ANALYTIC.compute_energy(flops, r) == \
+        r.active_power * ANALYTIC.compute_time(flops, r)
+    assert ANALYTIC.comm_energy(nbytes, r) == \
+        r.active_power * ANALYTIC.comm_time(nbytes, r)
+    assert ANALYTIC.energy(flops, nbytes, r) == \
+        ANALYTIC.compute_energy(flops, r) + ANALYTIC.comm_energy(nbytes, r)
+
+
+def _seed_predicted_energy(dag, resources, plan_, provider=None):
+    """The seed's predicted_energy algebra, inlined verbatim as the oracle."""
+    from repro.core.cost_model import resolve_provider
+    from repro.core.dag import ModelPartition
+    prov = resolve_provider(provider)
+    T = plan_.predicted_latency
+    busy = {}
+    if isinstance(plan_, ModelPartition):
+        for si in range(plan_.num_stages):
+            a, b = plan_.boundaries[si], plan_.boundaries[si + 1]
+            r = resources[plan_.assignment[si]]
+            seg = dag.segment(a, b)
+            busy[plan_.assignment[si]] = busy.get(
+                plan_.assignment[si], 0.0) + (
+                prov.compute_time(seg.flops, r, seg.kind)
+                + prov.comm_time(seg.bytes_in, r))
+    else:
+        for f, ri in zip(plan_.fractions, plan_.assignment):
+            r = resources[ri]
+            busy[ri] = (prov.compute_time(dag.total_flops * f, r,
+                                          dag.dominant_kind())
+                        + prov.comm_time(
+                            (dag.input_bytes + dag.output_bytes) * f, r))
+    e = 0.0
+    for i, r in enumerate(resources):
+        b = min(busy.get(i, 0.0), T)
+        e += r.active_power * b + r.idle_power * max(T - b, 0.0)
+    return e
+
+
+def test_predicted_energy_matches_seed_numerics():
+    """Both partition modes, all paper workloads: the provider-routed energy
+    equals the seed's inlined active_power × busy algebra."""
+    cluster = paper_cluster()
+    for name in EDGE_MODELS:
+        dag = EDGE_MODELS[name]()
+        delta = MODEL_DELTA[name]
+        resources = [node_as_resource(n, delta) for n in cluster.nodes]
+        for plan_ in (partition_model(dag, resources),
+                      partition_data(dag, resources)):
+            assert predicted_energy(dag, resources, plan_) == pytest.approx(
+                _seed_predicted_energy(dag, resources, plan_), rel=1e-12)
+
+
+def test_default_objective_is_bit_identical_to_seed():
+    """Passing the explicit latency Objective changes nothing at all."""
+    cluster = paper_cluster()
+    for name in ("resnet152", "efficientnet_b0"):
+        dag = EDGE_MODELS[name]()
+        cfg = PlannerConfig(delta=MODEL_DELTA[name])
+        base = plan(dag, cluster, cfg)
+        obj = plan(dag, cluster, PlannerConfig(delta=MODEL_DELTA[name],
+                                               objective=LATENCY))
+        assert base.predicted_latency == obj.predicted_latency
+        assert base.predicted_energy == obj.predicted_energy
+        assert base.global_plan.partition == obj.global_plan.partition
+        for lp0, lp1 in zip(base.local_plans, obj.local_plans):
+            assert lp0.partition == lp1.partition
+
+
+# --------------------------------------------------------------------------
+# Fitted energy predictors
+# --------------------------------------------------------------------------
+
+def test_energy_entries_fit_and_round_trip_through_store(tmp_path):
+    gt = SyntheticGroundTruth(paper_cluster(),
+                              power_scale={("orin_nx", "gpu"): 1.7},
+                              noise=0.05)
+    cluster, samples = profiled_samples(gt)
+    store = CalibrationStore(tmp_path)
+    for mode in ("linear", "isotonic"):
+        model = LearnedCostModel.fit(samples, mode=mode)
+        assert model.energy_entries, "energy predictors were not fitted"
+        store.save(cluster, model, note=f"energy-{mode}")
+        clone = store.load(cluster)
+        assert clone.energy_entries.keys() == model.energy_entries.keys()
+        for s in samples[::23]:
+            assert clone.predict_energy(s.key, s.kind, s.work, s.traffic) == \
+                model.predict_energy(s.key, s.kind, s.work, s.traffic)
+        assert model.energy_mape_against(samples) < 0.1
+
+
+def test_fitted_energy_monotone_in_work():
+    gt = SyntheticGroundTruth(paper_cluster(), noise=0.1)
+    _, samples = profiled_samples(gt)
+    for mode in ("linear", "isotonic"):
+        model = LearnedCostModel.fit(samples, mode=mode)
+        for key, kind in [("orin_nx/gpu", "conv"), ("rpi4/cpu", "dense")]:
+            works = [1e8 * (2 ** i) for i in range(12)]
+            preds = [model.predict_energy(key, kind, w, 1e5) for w in works]
+            assert all(p is not None and p > 0 for p in preds)
+            assert all(b >= a * (1 - 1e-9)
+                       for a, b in zip(preds, preds[1:])), (mode, key)
+
+
+def test_energy_recovers_true_power():
+    """A processor burning 2× its datasheet watts: the fitted marginal
+    energy is ~2× the datasheet active_power / rate."""
+    cluster = paper_cluster()
+    gt = SyntheticGroundTruth(cluster,
+                              power_scale={("tx2", "gpu"): 2.0},
+                              noise=0.02)
+    _, samples = profiled_samples(gt)
+    model = LearnedCostModel.fit(samples)
+    tx2_gpu = [p for n in cluster.nodes if n.name == "tx2"
+               for p in n.processors if p.name == "gpu"][0]
+    work = 5e9
+    joules = model.predict_energy("tx2/gpu", "conv", work)
+    # true energy ≈ 2 × active_power × (work / rate) plus overhead terms
+    expect = 2.0 * tx2_gpu.active_power * work / tx2_gpu.rate(1.0, "conv")
+    assert joules == pytest.approx(expect, rel=0.25)
+
+
+def test_node_energy_aggregates_processors():
+    samples = [
+        Sample("n/cpu", "conv", 1e9, 1e5, 1.0, energy_j=2.0),
+        Sample("n/cpu", "conv", 2e9, 1e5, 2.0, energy_j=4.0),
+        Sample("n/gpu", "conv", 1e9, 1e5, 0.25, energy_j=1.0),
+        Sample("n/gpu", "conv", 2e9, 1e5, 0.5, energy_j=2.0),
+    ]
+    model = LearnedCostModel.fit(samples)
+    # node-level: work splits by measured rates (1e9 vs 4e9 → 1/5 vs 4/5);
+    # energy = 0.2*w*2e-9 + 0.8*w*1e-9 J
+    w = 5e9
+    expect = 0.2 * w * 2e-9 + 0.8 * w * 1e-9
+    assert model.predict_energy("n", "conv", w) == pytest.approx(expect,
+                                                                 rel=1e-6)
+
+
+def test_calibrated_provider_energy_falls_back():
+    model = LearnedCostModel.fit(
+        [Sample("a/gpu", "conv", 1e9, 1e5, 0.01, energy_j=0.05),
+         Sample("a/gpu", "conv", 2e9, 1e5, 0.02, energy_j=0.10)])
+    prov = CalibratedCostProvider(model)
+    known = Resource(name="a/gpu", rate=1e11, bw=1e10, active_power=5.0)
+    unknown = Resource(name="z/npu", rate=1e11, bw=1e10, active_power=3.0)
+    assert prov.compute_energy(1e9, known, "conv") == pytest.approx(0.05)
+    # unknown resource → datasheet power × (calibrated-or-analytic) time
+    assert prov.compute_energy(1e9, unknown, "conv") == pytest.approx(
+        3.0 * ANALYTIC.compute_time(1e9, unknown))
+    assert math.isfinite(prov.comm_energy(1e6, unknown))
+
+
+# --------------------------------------------------------------------------
+# Energy-aware planning
+# --------------------------------------------------------------------------
+
+def test_energy_objective_picks_lower_energy_plan():
+    """On the duty-cycled cluster the energy objective must find plans with
+    strictly lower predicted *and* simulated energy than latency-only
+    planning, within the latency budget, on at least two workloads."""
+    cluster = battery_cluster()
+    improved = 0
+    for name in EDGE_MODELS:
+        dag = EDGE_MODELS[name]()
+        delta = MODEL_DELTA[name]
+        base = plan(dag, cluster, PlannerConfig(delta=delta))
+        budget = base.predicted_latency * 1.35
+        obj = Objective("energy", latency_budget=budget, radio_power=4.0)
+        aware = plan(dag, cluster, PlannerConfig(delta=delta, objective=obj))
+        rep_l = simulate(cluster, "hidp", [(0.0, dag, delta)])
+        rep_e = simulate(cluster, "hidp", [(0.0, dag, delta)], objective=obj)
+        en_l = rep_l.energies()[name]
+        en_e = rep_e.energies()[name]
+        if (en_e < en_l and aware.predicted_latency <= budget * (1 + 1e-9)):
+            improved += 1
+    assert improved >= 2, f"energy objective improved only {improved} models"
+
+
+def test_edp_objective_stays_closer_to_latency():
+    """EDP trades less latency away than pure energy minimization."""
+    cluster = battery_cluster()
+    dag = EDGE_MODELS["resnet152"]()
+    delta = MODEL_DELTA["resnet152"]
+    base = plan(dag, cluster, PlannerConfig(delta=delta))
+    budget = base.predicted_latency * 1.35
+    p_en = plan(dag, cluster, PlannerConfig(
+        delta=delta, objective=Objective("energy", latency_budget=budget)))
+    p_edp = plan(dag, cluster, PlannerConfig(
+        delta=delta, objective=Objective("edp", latency_budget=budget)))
+    assert p_edp.predicted_latency <= p_en.predicted_latency * (1 + 1e-9)
+    assert p_en.predicted_energy <= p_edp.predicted_energy * (1 + 1e-9)
+
+
+def test_partition_respects_latency_budget():
+    """The global DP under a tight budget returns a plan whose predicted
+    latency does not exceed the latency-optimal plan's (budget-infeasible
+    searches fall back toward the fastest plan)."""
+    cluster = battery_cluster()
+    dag = EDGE_MODELS["vgg19"]()
+    delta = MODEL_DELTA["vgg19"]
+    resources = [node_as_resource(n, delta) for n in cluster.nodes]
+    fastest = partition(dag, resources)
+    tight = Objective("energy", latency_budget=fastest.predicted_latency)
+    p = partition(dag, resources, objective=tight)
+    assert p.predicted_latency <= fastest.predicted_latency * (1 + 1e-9)
+
+
+# --------------------------------------------------------------------------
+# Runtime: ground-truth energy + drift
+# --------------------------------------------------------------------------
+
+def test_simulator_meters_ground_truth_energy():
+    """Hardware burning 2× datasheet watts shows up in measured energy and
+    in the prediction-error scoreboard; a faithful datasheet does not."""
+    cluster = paper_cluster()
+    dag = EDGE_MODELS["resnet152"]()
+    delta = MODEL_DELTA["resnet152"]
+    gt = SyntheticGroundTruth(cluster, power_scale={"orin_nx": 2.5})
+    rep_clean = simulate(cluster, "hidp", [(0.0, dag, delta)])
+    rep_hot = simulate(cluster, "hidp", [(0.0, dag, delta)], ground_truth=gt)
+    assert rep_hot.energies()["resnet152"] > rep_clean.energies()["resnet152"]
+    assert rep_clean.prediction_error()["energy"] < 0.05
+    assert rep_hot.prediction_error()["energy"] > \
+        rep_clean.prediction_error()["energy"]
+
+
+def test_energy_drift_triggers_replan_when_latency_holds():
+    """Power shifts 2.5×, timing stays faithful: only the energy window can
+    catch it — and it re-plans exactly once."""
+    model = LearnedCostModel.fit(
+        [Sample("n/gpu", "conv", w, 0.0, w / 1e9, energy_j=5.0 * w / 1e9)
+         for w in (1e8, 2e8, 4e8, 8e8)])
+    fb = FeedbackLoop(model, threshold=0.3)
+    for i in range(30):
+        work = 1e8 * (1 + i % 5)
+        fb.observe("n/gpu", "conv", work, 0.0, work / 1e9,
+                   energy_j=5.0 * work / 1e9)
+    assert fb.replans == 0
+    for i in range(30):
+        work = 1e8 * (1 + i % 5)
+        fb.observe("n/gpu", "conv", work, 0.0, work / 1e9,
+                   energy_j=2.5 * 5.0 * work / 1e9)
+    assert fb.replans == 1
+    assert fb.events[0].metric == "energy"
+    # refit from post-change observations tracks the new power draw
+    assert model.predict_energy("n/gpu", "conv", 4e8) == pytest.approx(
+        2.5 * 5.0 * 4e8 / 1e9, rel=0.05)
+
+
+def test_simulator_feeds_energy_observations():
+    """Diverging power on true hardware reaches the feedback loop through
+    the simulator's per-shard observations and trips an energy drift."""
+    cluster = paper_cluster()
+    dags = {k: f() for k, f in EDGE_MODELS.items()}
+    gt = SyntheticGroundTruth(cluster, power_scale={("orin_nx", "gpu"): 3.0})
+    clean = calibrate(cluster, dags, MODEL_DELTA)   # believes the datasheet
+    fb = FeedbackLoop(clean.model, threshold=0.3)
+    reqs = [(0.05 * i, dags["resnet152"], MODEL_DELTA["resnet152"])
+            for i in range(4)]
+    simulate(cluster, "hidp", reqs, ground_truth=gt, feedback=fb)
+    assert fb.replans >= 1
+    assert any(e.metric == "energy" for e in fb.events)
+    # timing was faithful throughout — latency must not be what tripped
+    assert all(e.metric == "energy" for e in fb.events)

@@ -101,3 +101,22 @@ def test_engine_feedback_reenters_explore_on_drift(small_lm):
     # after the hard refit the model's belief is in the measured ballpark
     pred = beliefs.predict("engine/decode", "decode", 1.0, 0.0)
     assert pred is not None and pred > 1e-7
+
+
+def test_engine_per_request_objective(small_lm):
+    """Requests carry a planning objective; the engine tracks the dominant
+    one across queued + in-flight traffic and rejects unknown metrics."""
+    cfg, model, params = small_lm
+    eng = ServingEngine(model, params, max_batch=2, max_len=32)
+    assert eng.dominant_objective() == "latency"      # empty engine default
+    eng.submit(np.asarray([1, 2, 3], np.int32), max_new_tokens=2)
+    eng.submit(np.asarray([4, 5], np.int32), max_new_tokens=2,
+               objective="energy")
+    eng.submit(np.asarray([6], np.int32), max_new_tokens=2,
+               objective="energy")
+    assert eng.dominant_objective() == "energy"
+    with pytest.raises(ValueError):
+        eng.submit(np.asarray([7], np.int32), objective="throughput")
+    done = eng.run_until_done()
+    assert len(done) == 3
+    assert eng.dominant_objective() == "latency"      # drained → default
