@@ -1,14 +1,22 @@
 """Table I feature matrix + §IV-A planner overhead (paper: DP exploration
-including both tiers ≈ 15 ms per request on average)."""
+including both tiers ≈ 15 ms per request on average) + the plan-cache
+amortization table: a cold frontier pass per (cluster, calibration, dag)
+vs. warm cached lookups serving any objective — the CoEdge/DEFER-style
+amortization that takes the ~15 ms DP off the serving hot path.  The warm
+path must be ≥ 100× faster than cold planning (gated; run as a script the
+exit code reports it, so CI can smoke it)."""
 
 from __future__ import annotations
 
+import sys
 import time
 
 import numpy as np
 
-from repro.core import PlannerConfig, plan
+from repro.core import (HiDPPlanner, Objective, PlannerConfig, plan)
 from repro.core.edge_models import EDGE_MODELS, MODEL_DELTA, paper_cluster
+from repro.core.objective import METRICS
+from repro.serving import PlanCache
 
 from .common import emit
 
@@ -43,8 +51,68 @@ def main() -> dict:
     emit("planner/overhead", mean_ms * 1e3, f"p95_ms={p95_ms:.1f}")
     print(f"\nHiDP two-tier planning overhead: mean {mean_ms:.1f} ms, "
           f"p95 {p95_ms:.1f} ms (paper: ~15 ms)")
-    return {"mean_ms": mean_ms, "p95_ms": p95_ms}
+
+    cache_stats = plan_cache_table(cluster)
+    return {"mean_ms": mean_ms, "p95_ms": p95_ms, "cache": cache_stats}
+
+
+# --------------------------------------------------------------------------
+# PlanCache amortization: cold frontier pass vs warm cached lookup
+# --------------------------------------------------------------------------
+
+WARM_LOOKUPS = 10       # per batch: METRICS cycled, all hits after the miss
+WARM_BATCHES = 3        # best batch counts — robust to GC/scheduler jitter
+SPEEDUP_TARGET = 100.0
+
+
+def plan_cache_table(cluster) -> dict:
+    cache = PlanCache(HiDPPlanner(PlannerConfig(
+        objective=Objective("energy", radio_power=4.0))), cluster)
+    print("\n== plan cache: cold frontier pass vs warm lookup ==")
+    print(f"{'model':18s}{'cold ms':>9}{'warm us':>9}{'speedup':>10}"
+          f"{'front':>7}{'hit rate':>10}")
+    out, worst = {}, float("inf")
+    for name, fn in EDGE_MODELS.items():
+        dag = fn()
+        delta = MODEL_DELTA[name]
+        hits0, misses0 = cache.hits, cache.misses
+        cold = cache.get(dag, "latency", delta=delta)   # the one DP pass
+        warm_s = float("inf")
+        for _ in range(WARM_BATCHES):
+            t0 = time.perf_counter()
+            for i in range(WARM_LOOKUPS):
+                cache.get(dag, METRICS[i % len(METRICS)], delta=delta)
+            warm_s = min(warm_s,
+                         (time.perf_counter() - t0) / WARM_LOOKUPS)
+        speedup = cold.planning_seconds / warm_s
+        worst = min(worst, speedup)
+        hit_rate = (cache.hits - hits0) / (cache.hits - hits0
+                                           + cache.misses - misses0)
+        front_n = len(cache.front(dag, delta=delta))
+        print(f"{name:18s}{cold.planning_seconds * 1e3:9.1f}"
+              f"{warm_s * 1e6:9.1f}{speedup:9.0f}x{front_n:7d}"
+              f"{hit_rate:10.3f}")
+        emit(f"tab1/cache/{name}", warm_s * 1e6,
+             f"cold_ms={cold.planning_seconds * 1e3:.1f};"
+             f"speedup={speedup:.0f};hit_rate={hit_rate:.3f}")
+        out[name] = {"cold_s": cold.planning_seconds, "warm_s": warm_s,
+                     "speedup": speedup, "hit_rate": hit_rate}
+    # the deterministic half of the gate: exactly one DP pass per model,
+    # everything else a hit — independent of wall-clock jitter
+    ok = worst >= SPEEDUP_TARGET and cache.misses == len(EDGE_MODELS)
+    print(f"\n{'PASS' if ok else 'FAIL'}: warm cached lookups are >= "
+          f"{worst:.0f}x faster than cold frontier planning on every model "
+          f"(target >= {SPEEDUP_TARGET:.0f}x); "
+          f"overall hit rate {cache.hit_rate():.3f}, "
+          f"{cache.misses} DP passes for "
+          f"{cache.hits + cache.misses} plan requests "
+          f"(expected {len(EDGE_MODELS)} passes)")
+    out["min_speedup"] = worst
+    out["hit_rate"] = cache.hit_rate()
+    out["pass"] = ok
+    return out
 
 
 if __name__ == "__main__":
-    main()
+    result = main()
+    sys.exit(0 if result["cache"]["pass"] else 1)

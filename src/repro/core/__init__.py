@@ -14,12 +14,19 @@ from .cost_model import (ANALYTIC, AnalyticCostProvider,  # noqa: F401
                          resolve_provider, tpu_chip, tpu_pod)
 from .dag import Block, DataPartition, ModelDAG, ModelPartition, chain  # noqa: F401
 from .objective import LATENCY, Objective, resolve_objective  # noqa: F401
+from .pareto import ParetoFront, ParetoPoint  # noqa: F401
+from .fingerprint import cluster_fingerprint  # noqa: F401
 from .dp_partitioner import (partition, partition_data,  # noqa: F401
-                             partition_model, predicted_energy)
-from .global_partitioner import GlobalPlan, plan_global  # noqa: F401
-from .local_partitioner import LocalPlan, p1_plan, plan_local  # noqa: F401
-from .hidp import HiDPPlan, PlannerConfig, plan, sub_dag_for  # noqa: F401
-from .baselines import STRATEGIES  # noqa: F401
+                             partition_data_front, partition_front,
+                             partition_model, partition_model_front,
+                             predicted_energy)
+from .global_partitioner import (GlobalPlan, plan_global,  # noqa: F401
+                                 plan_global_front)
+from .local_partitioner import (LocalPlan, p1_plan, plan_local,  # noqa: F401
+                                plan_local_front)
+from .hidp import (HiDPPlan, HiDPPlanner, PlannerConfig, plan,  # noqa: F401
+                   plan_front, sub_dag_for)
+from .baselines import STRATEGIES, STRATEGY_FRONTS  # noqa: F401
 from .scheduler import FollowerFSM, InferenceRequest, LeaderFSM, State  # noqa: F401
 from .cluster import ClusterManager, HeartbeatMonitor  # noqa: F401
 from .simulator import EdgeSimulator, SimReport, SimRequest, simulate  # noqa: F401

@@ -35,9 +35,11 @@ from .cost_model import (Cluster, CostProvider, node_as_resource,
 from .dag import DataPartition, ModelDAG, ModelPartition
 from .dp_partitioner import partition_data, partition_model, predicted_energy
 from .global_partitioner import GlobalAssignment, GlobalPlan
-from .hidp import HiDPPlan, PlannerConfig, _hierarchical_cost, plan, sub_dag_for
+from .hidp import (HiDPPlan, PlannerConfig, _hierarchical_cost, plan,
+                   plan_front, sub_dag_for)
 from .local_partitioner import p1_plan, plan_local
 from .objective import Objective, resolve_objective
+from .pareto import ParetoFront, ParetoPoint
 
 # Strategies optionally accept ``provider=`` (a CostProvider) so the whole
 # comparison can be re-run against calibrated cost predictions, and
@@ -295,4 +297,69 @@ STRATEGIES: dict[str, Strategy] = {
     "modnn": modnn_strategy,
     "omniboost": omniboost_strategy,
     "disnet": disnet_strategy,
+}
+
+
+# --------------------------------------------------------------------------
+# Frontier views — every strategy as a ParetoFront, so figures comparing
+# strategies can compare whole trade-off curves, not one scalarization.
+# --------------------------------------------------------------------------
+
+def hidp_front(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
+               provider: CostProvider | None = None,
+               objective: Objective | None = None) -> ParetoFront:
+    """HiDP's full hierarchical frontier (``objective`` only contributes its
+    radio-power pricing; selection happens at the caller)."""
+    return plan_front(dag, cluster, PlannerConfig(delta=delta,
+                                                  provider=provider,
+                                                  objective=objective))
+
+
+def _single_point_front(strategy: Strategy, dag: ModelDAG, cluster: Cluster,
+                        delta: float, provider: CostProvider | None,
+                        objective: Objective | None) -> ParetoFront:
+    p = strategy(dag, cluster, delta, provider=provider, objective=objective)
+    return ParetoFront([ParetoPoint(p.predicted_latency, p.predicted_energy,
+                                    p)])
+
+
+def modnn_front(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
+                provider: CostProvider | None = None,
+                objective: Objective | None = None) -> ParetoFront:
+    """MoDNN's split is fixed by its paper (capacity-proportional, ignores
+    the objective), so its "frontier" is one point."""
+    return _single_point_front(modnn_strategy, dag, cluster, delta, provider,
+                               objective)
+
+
+def omniboost_front(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
+                    provider: CostProvider | None = None,
+                    objective: Objective | None = None) -> ParetoFront:
+    """OmniBoost's MCTS rewards throughput only — one point."""
+    return _single_point_front(omniboost_strategy, dag, cluster, delta,
+                               provider, objective)
+
+
+def disnet_front(dag: ModelDAG, cluster: Cluster, delta: float = 1.0,
+                 provider: CostProvider | None = None,
+                 objective: Objective | None = None) -> ParetoFront:
+    """DisNet has one real degree of freedom — its heuristic global mode
+    choice — so its frontier is the skyline of the latency-picked and
+    energy-picked hybrids (one or two points)."""
+    obj = resolve_objective(objective)
+    p_lat = disnet_strategy(dag, cluster, delta, provider=provider)
+    p_en = disnet_strategy(dag, cluster, delta, provider=provider,
+                           objective=Objective("energy",
+                                               radio_power=obj.radio_power))
+    return ParetoFront.build([
+        (p.predicted_latency, p.predicted_energy, p) for p in (p_lat, p_en)])
+
+
+StrategyFront = Callable[..., ParetoFront]
+
+STRATEGY_FRONTS: dict[str, StrategyFront] = {
+    "hidp": hidp_front,
+    "modnn": modnn_front,
+    "omniboost": omniboost_front,
+    "disnet": disnet_front,
 }

@@ -33,6 +33,24 @@ from typing import Sequence
 from .cost_model import CostProvider, Resource, resolve_provider
 from .dag import DataPartition, ModelDAG, ModelPartition, Partition
 from .objective import Objective, resolve_objective
+from .pareto import ParetoFront, pareto_filter
+
+# Per-cell frontier cap for the (latency, energy) DP search — the *search
+# breadth* knob, distinct from a front's output ``width`` (how many points
+# callers get back, e.g. ``PlannerConfig.front_width``).  Endpoints always
+# survive thinning, so the cap trades interior resolution for speed.
+DP_FRONT_CAP = 8
+
+
+def _heterogeneity_order(dag: ModelDAG, resources: Sequence[Resource],
+                         prov: CostProvider
+                         ) -> tuple[list[Resource], list[int]]:
+    """Resources by descending effective rate for the DAG's dominant kind —
+    the paper's "following the resource heterogeneity" seed order."""
+    kind = dag.dominant_kind()
+    order = sorted(range(len(resources)),
+                   key=lambda i: -prov.effective_rate(resources[i], kind))
+    return [resources[i] for i in order], order
 
 
 # --------------------------------------------------------------------------
@@ -59,28 +77,25 @@ def partition_model(dag: ModelDAG, resources: Sequence[Resource],
     used by the simulator's first-request path; steady-state serving keeps
     weights resident, the paper's implicit assumption).
 
-    ``objective``: what the recurrence minimizes.  The default (latency)
-    runs the seed's scalar DP unchanged.  For ``energy``/``edp`` the DP
-    tracks (latency, energy) pairs and compares states by
-    ``Objective.key``; per-stage energy is additive because a pipeline busies
-    one resource at a time — stage energy = active compute+comm joules plus
-    the *other* resources' idle power over the stage's seconds (the
-    idle-coupling that makes "slow but frugal" a real trade-off, not a free
-    win).  EDP is not stage-separable, so for ``edp`` the prefix
-    scalarization is a (well-behaved) heuristic rather than an exact DP.
+    ``objective``: how the winning plan is chosen.  The default (latency)
+    runs the seed's scalar DP unchanged.  Any other objective selects over
+    the plan frontier (:func:`partition_model_front`) — feasible-first under
+    the latency budget, then metric-optimal — instead of scalarizing inside
+    the recurrence.
     """
     n = len(dag.blocks)
     if n == 0:
         raise ValueError("empty DAG")
     prov = resolve_provider(provider)
     obj = resolve_objective(objective)
+    if not obj.is_latency:
+        return partition_model_front(
+            dag, resources, weight_transfer=weight_transfer, provider=prov,
+            radio_power=obj.radio_power).select(obj)
     # order by the provider's view of the DAG's dominant kind — for the
     # analytic provider this is exactly the seed's rate ordering, for a
     # calibrated one it follows measured rates
-    kind = dag.dominant_kind()
-    order = sorted(range(len(resources)),
-                   key=lambda i: -prov.effective_rate(resources[i], kind))
-    res = [resources[i] for i in order]
+    res, order = _heterogeneity_order(dag, resources, prov)
     m = len(res)
 
     # Per-resource segment costers (O(1) via prefix sums).
@@ -91,11 +106,6 @@ def partition_model(dag: ModelDAG, resources: Sequence[Resource],
 
     def seg_params(a: int, b: int) -> float:
         return cum_params[b] - cum_params[a]
-
-    if not obj.is_latency:
-        return _partition_model_objective(
-            dag, resources, res, order, costers, seg_params,
-            weight_transfer=weight_transfer, prov=prov, obj=obj)
 
     INF = float("inf")
     # dp[j][i]: best latency for blocks[:i] using a subset of the first j
@@ -160,119 +170,144 @@ def partition_model(dag: ModelDAG, resources: Sequence[Resource],
                           predicted_latency=end_cost)
 
 
-def _partition_model_objective(dag: ModelDAG, resources: Sequence[Resource],
-                               res: list[Resource], order: list[int],
-                               costers: list, seg_params,
-                               *, weight_transfer: bool,
-                               prov: CostProvider,
-                               obj: Objective) -> ModelPartition:
-    """The (latency, energy)-pair variant of the model-partitioning DP.
+def _model_front_search(dag: ModelDAG, resources: Sequence[Resource],
+                        *, weight_transfer: bool, prov: CostProvider,
+                        radio_power: float,
+                        cap: int = DP_FRONT_CAP) -> list[ModelPartition]:
+    """The (latency, energy)-pair DP, keeping a *frontier* per cell.
 
     Same state space and transitions as the scalar DP; each state carries
-    the prefix's accumulated latency *and* energy and states compare by
-    ``obj.key``.  Energy is stage-additive: while one pipeline stage runs,
-    its resource draws active power and every *other* resource draws idle
-    power, so stage energy = active J + (Σ idle − own idle) × stage seconds
+    the prefix's accumulated latency *and* energy, and every cell keeps a
+    capped non-dominated set of states instead of one scalarized winner.
+    Energy is stage-additive: while one pipeline stage runs, its resource
+    draws active power and every *other* resource draws idle power, so
+    stage energy = active J + (Σ idle − own idle) × stage seconds
     (identically the algebra of :func:`predicted_energy`, unrolled per
-    stage), plus the objective's radio term on wireless transfer seconds.
+    stage), plus ``radio_power`` watts on wireless transfer seconds.
 
-    States are linked records ``(key, lat, en, j, s, prev)`` — each points
-    at its exact predecessor, so reconstruction replays the very chain whose
-    cost was reported.  Every cell keeps a small frontier: the best state by
-    ``obj.key`` *and* the best by raw latency.  Scalarized single-state DPs
-    can prune the only prefix that stays inside a ``latency_budget``; the
-    latency variant preserves the seed's latency-optimal chain end to end,
-    guaranteeing the search returns a within-budget plan whenever the
-    latency-optimal pipeline over these resources fits the budget.  (EDP is
-    additionally a prefix-scalarization heuristic — E×T is not
-    stage-separable.)
+    States are linked records ``(lat, en, j, s, prev)`` — each points at
+    its exact predecessor, so reconstruction replays the very chain whose
+    cost was reported.  Latency accumulates with the same association as
+    the scalar DP (``prev + comm + compute``), so the latency-minimal chain
+    here is float-identical to the scalar DP's plan.  Returns the distinct
+    partitions realising the final non-dominated states; callers re-price
+    them uniformly and skyline-filter.
     """
-    n, m = len(dag.blocks), len(res)
+    n, m = len(dag.blocks), len(resources)
+    res, order = _heterogeneity_order(dag, resources, prov)
+    costers = [prov.segment_coster(dag, r) for r in res]
     ecosters = [prov.segment_energy_coster(dag, r) for r in res]
+    cum_params = [0.0]
+    for b in dag.blocks:
+        cum_params.append(cum_params[-1] + b.param_bytes)
     idle_total = sum(r.idle_power for r in resources)
-
-    # state: (key, lat, en, j, s, prev_state); frontier per cell: state
-    # minimizing key and state minimizing latency (often the same object).
-    zero = (obj.key(0.0, 0.0), 0.0, 0.0, 0, 0, None)
-
-    def merge(frontier, state):
-        if frontier is None:
-            return (state, state)
-        by_key, by_lat = frontier
-        if state[0] < by_key[0]:
-            by_key = state
-        if state[1] < by_lat[1]:
-            by_lat = state
-        return (by_key, by_lat)
-
-    def states(frontier):
-        if frontier is None:
-            return ()
-        return frontier if frontier[0] is not frontier[1] else frontier[:1]
 
     # dp[j][i]: frontier of states whose last stage ends at i on res j-1;
     # best[j][i]: frontier over all dp[j'][i], j' <= j.
-    dp = [[None] * (n + 1) for _ in range(m + 1)]
-    best = [[None] * (n + 1) for _ in range(m + 1)]
+    zero = (0.0, 0.0, 0, 0, None)
+    dp: list[list[list]] = [[[] for _ in range(n + 1)] for _ in range(m + 1)]
+    best: list[list[list]] = [[[] for _ in range(n + 1)]
+                              for _ in range(m + 1)]
     for j in range(m + 1):
-        dp[j][0] = (zero, zero)
-        best[j][0] = (zero, zero)
+        dp[j][0] = [zero]
+        best[j][0] = [zero]
 
     for j in range(1, m + 1):
         r = res[j - 1]
         coster, ecoster = costers[j - 1], ecosters[j - 1]
         idle_rest = idle_total - r.idle_power
         for i in range(1, n + 1):
+            cell: list = []
             for s in range(i):
-                for prev in states(best[j - 1][s]):
-                    xfer = (dag.blocks[s].bytes_in if s > 0
-                            else dag.input_bytes)
-                    comm_s = prov.comm_time(xfer, r)
-                    lat_stage = comm_s + coster(s, i)
-                    en_stage = (prov.comm_energy(xfer, r) + ecoster(s, i)
-                                + obj.radio_power * comm_s)
-                    if weight_transfer and j > 1:
-                        wt = prov.comm_time(seg_params(s, i), r, rtt=0.0)
-                        lat_stage += wt
-                        en_stage += (prov.comm_energy(seg_params(s, i), r,
-                                                      rtt=0.0)
-                                     + obj.radio_power * wt)
-                    en_stage += idle_rest * lat_stage
-                    lat = prev[1] + lat_stage
-                    en = prev[2] + en_stage
-                    state = (obj.key(lat, en), lat, en, j, s, prev)
-                    dp[j][i] = merge(dp[j][i], state)
-            best[j][i] = best[j - 1][i]
-            for st in states(dp[j][i]):
-                best[j][i] = merge(best[j][i], st)
+                prevs = best[j - 1][s]
+                if not prevs:
+                    continue
+                xfer = dag.blocks[s].bytes_in if s > 0 else dag.input_bytes
+                comm_s = prov.comm_time(xfer, r)
+                cseg = coster(s, i)
+                lat_stage = comm_s + cseg
+                en_stage = (prov.comm_energy(xfer, r) + ecoster(s, i)
+                            + radio_power * comm_s)
+                wt = 0.0
+                if weight_transfer and j > 1:
+                    wt = prov.comm_time(cum_params[i] - cum_params[s], r,
+                                        rtt=0.0)
+                    en_stage += (prov.comm_energy(
+                        cum_params[i] - cum_params[s], r, rtt=0.0)
+                        + radio_power * wt)
+                en_stage += idle_rest * (lat_stage + wt)
+                for prev in prevs:
+                    # associate exactly like the scalar DP: (((prev + comm)
+                    # + compute) + weights) — keeps the latency-minimal
+                    # chain bit-identical to partition_model's
+                    lat = prev[0] + comm_s + cseg
+                    if wt:
+                        lat += wt
+                    cell = pareto_filter(
+                        cell, (lat, prev[1] + en_stage, j, s, prev), cap)
+            dp[j][i] = cell
+            merged = list(best[j - 1][i])
+            for st in cell:
+                merged = pareto_filter(merged, st, cap)
+            best[j][i] = merged
 
-    end_state, end_key = None, None
+    finals: list = []
     for j in range(1, m + 1):
         r = res[j - 1]
         t_out = prov.comm_time(dag.output_bytes, r)
         e_out = (prov.comm_energy(dag.output_bytes, r)
-                 + obj.radio_power * t_out
+                 + radio_power * t_out
                  + (idle_total - r.idle_power) * t_out)
-        for st in states(dp[j][n]):
-            lat, en = st[1] + t_out, st[2] + e_out
-            key = obj.key(lat, en)
-            if end_key is None or key < end_key:
-                end_state, end_key = (st, lat), key
-    if end_state is None:
+        for st in dp[j][n]:
+            finals = pareto_filter(
+                finals, (st[0] + t_out, st[1] + e_out, st), cap=4 * cap)
+    if not finals:
         raise RuntimeError("model-partition DP found no feasible plan")
 
-    # Reconstruct by replaying the exact predecessor chain.
-    st, final_lat = end_state
-    cuts: list[int] = [n]
-    assign: list[int] = []
-    while st[5] is not None:                     # until the zero state
-        assign.append(order[st[3] - 1])
-        cuts.append(st[4])
-        st = st[5]
-    cuts.reverse()
-    assign.reverse()
-    return ModelPartition(boundaries=tuple(cuts), assignment=tuple(assign),
-                          predicted_latency=final_lat)
+    plans: list[ModelPartition] = []
+    for lat, _en, st in finals:
+        cuts: list[int] = [n]
+        assign: list[int] = []
+        while st[4] is not None:                 # until the zero state
+            assign.append(order[st[2] - 1])
+            cuts.append(st[3])
+            st = st[4]
+        cuts.reverse()
+        assign.reverse()
+        plans.append(ModelPartition(boundaries=tuple(cuts),
+                                    assignment=tuple(assign),
+                                    predicted_latency=lat))
+    return plans
+
+
+def partition_model_front(dag: ModelDAG, resources: Sequence[Resource],
+                          *, weight_transfer: bool = False,
+                          provider: CostProvider | None = None,
+                          radio_power: float = 0.0,
+                          width: int | None = None) -> ParetoFront:
+    """The latency–energy frontier of heterogeneous pipeline partitions.
+
+    Candidates are the frontier DP's final non-dominated chains *plus* the
+    seed scalar DP's latency optimum, spliced in first so the front's
+    ``latency_optimal`` point is bit-identical to :func:`partition_model`
+    under the default objective.  Every candidate is re-priced uniformly by
+    :func:`predicted_energy` (with ``radio_power`` on transfer seconds) and
+    skyline-filtered."""
+    prov = resolve_provider(provider)
+    seed = partition_model(dag, resources, weight_transfer=weight_transfer,
+                           provider=prov)
+    cands = [p for p in _model_front_search(
+        dag, resources, weight_transfer=weight_transfer, prov=prov,
+        radio_power=radio_power)
+        if (p.boundaries, p.assignment) != (seed.boundaries, seed.assignment)]
+
+    def price(p):
+        return (p.predicted_latency,
+                predicted_energy(dag, resources, p, prov,
+                                 radio_power=radio_power), p)
+
+    return ParetoFront.build([price(p) for p in cands], anchor=price(seed),
+                             width=width)
 
 
 # --------------------------------------------------------------------------
@@ -316,37 +351,66 @@ def partition_data(dag: ModelDAG, resources: Sequence[Resource],
 
     Each σ's split is water-filled so every participant finishes together
     (the latency-optimal division for that subset); the *objective* then
-    chooses between subsets — under ``energy``/``edp`` a smaller σ that
-    keeps slow helpers idle (saving their active power and the shared
-    medium's radio energy) can beat the latency-optimal wide split."""
+    selects between subsets over their frontier — under ``energy``/``edp``
+    a smaller σ that keeps slow helpers idle (saving their active power and
+    the shared medium's radio energy) can beat the latency-optimal wide
+    split."""
     prov = resolve_provider(provider)
     obj = resolve_objective(objective)
-    kind = dag.dominant_kind()
-    order = sorted(range(len(resources)),
-                   key=lambda i: -prov.effective_rate(resources[i], kind))
+    if not obj.is_latency:
+        return partition_data_front(
+            dag, resources, provider=prov,
+            radio_power=obj.radio_power).select(obj)
+    best: DataPartition | None = None
+    for cand in _data_candidates(dag, resources, prov):
+        if best is None or cand.predicted_latency < best.predicted_latency:
+            best = cand
+    if best is None:
+        raise RuntimeError("data-partition search found no feasible plan")
+    return best
+
+
+def _data_candidates(dag: ModelDAG, resources: Sequence[Resource],
+                     prov: CostProvider) -> list[DataPartition]:
+    """One balanced candidate per σ = 1..m over heterogeneity-ordered
+    resources (the seed enumeration, every subset kept)."""
+    _, order = _heterogeneity_order(dag, resources, prov)
     if not all(b.data_splittable for b in dag.blocks):
         order = order[:1]
-    best: DataPartition | None = None
-    best_en = float("inf")
+    out: list[DataPartition] = []
     for sigma in range(1, len(order) + 1):
         subset_idx = order[:sigma]
         subset = [resources[i] for i in subset_idx]
         fr, t = _balanced_fractions(dag, subset, prov)
         if not fr:
             continue
-        cand = DataPartition(fractions=fr, assignment=tuple(subset_idx),
-                             predicted_latency=t)
-        if obj.is_latency:
-            if best is None or t < best.predicted_latency:
-                best = cand
-            continue
-        en = predicted_energy(dag, resources, cand, prov,
-                              radio_power=obj.radio_power)
-        if best is None or obj.better(t, en, best.predicted_latency, best_en):
-            best, best_en = cand, en
-    if best is None:
+        out.append(DataPartition(fractions=fr, assignment=tuple(subset_idx),
+                                 predicted_latency=t))
+    return out
+
+
+def partition_data_front(dag: ModelDAG, resources: Sequence[Resource],
+                         *, provider: CostProvider | None = None,
+                         radio_power: float = 0.0,
+                         width: int | None = None) -> ParetoFront:
+    """The latency–energy frontier over the σ = 1..m balanced splits.
+    σ = 1 on the fastest resource is always feasible, so the front is never
+    empty; the seed's latency winner is its ``latency_optimal`` point."""
+    prov = resolve_provider(provider)
+    cands = _data_candidates(dag, resources, prov)
+    if not cands:
         raise RuntimeError("data-partition search found no feasible plan")
-    return best
+    # the seed latency winner (first σ on ties, as in partition_data)
+    # anchors the latency endpoint
+    seed = min(cands, key=lambda p: p.predicted_latency)
+    points = [(p.predicted_latency,
+               predicted_energy(dag, resources, p, prov,
+                                radio_power=radio_power), p)
+              for p in cands if p is not seed]
+    anchor = (seed.predicted_latency,
+              predicted_energy(dag, resources, seed, prov,
+                               radio_power=radio_power), seed)
+    return ParetoFront.build(points, anchor=anchor, width=width)
 
 
 # --------------------------------------------------------------------------
@@ -360,26 +424,45 @@ def partition(dag: ModelDAG, resources: Sequence[Resource],
     """Θ ← best(Θ_ω, Θ_σ): run both searches, return the better plan.
 
     With the default latency objective this is the paper's
-    ``Θ = min(Θ_ω, Θ_σ)`` verbatim (model wins ties, as in the seed); under
-    ``energy``/``edp`` both candidates are priced by
-    :func:`predicted_energy` and ``Objective.key`` decides — respecting the
-    latency budget when one is set."""
+    ``Θ = min(Θ_ω, Θ_σ)`` verbatim (model wins ties, as in the seed); any
+    other objective *selects* over the merged frontier
+    (:func:`partition_front`) — feasible-first under the latency budget,
+    then metric-optimal."""
     obj = resolve_objective(objective)
+    if not obj.is_latency:
+        return partition_front(dag, resources,
+                               weight_transfer=weight_transfer,
+                               provider=provider,
+                               radio_power=obj.radio_power).select(obj)
     theta_w = partition_model(dag, resources, weight_transfer=weight_transfer,
-                              provider=provider, objective=obj)
-    theta_s = partition_data(dag, resources, provider=provider, objective=obj)
-    if obj.is_latency:
-        if theta_w.predicted_latency <= theta_s.predicted_latency:
-            return theta_w
-        return theta_s
-    en_w = predicted_energy(dag, resources, theta_w, provider,
-                            radio_power=obj.radio_power)
-    en_s = predicted_energy(dag, resources, theta_s, provider,
-                            radio_power=obj.radio_power)
-    if obj.at_least_as_good(theta_w.predicted_latency, en_w,
-                            theta_s.predicted_latency, en_s):
+                              provider=provider)
+    theta_s = partition_data(dag, resources, provider=provider)
+    if theta_w.predicted_latency <= theta_s.predicted_latency:
         return theta_w
     return theta_s
+
+
+def partition_front(dag: ModelDAG, resources: Sequence[Resource],
+                    *, weight_transfer: bool = False,
+                    provider: CostProvider | None = None,
+                    radio_power: float = 0.0,
+                    width: int | None = None) -> ParetoFront:
+    """The merged latency–energy frontier over *both* partitioning modes.
+
+    Model-mode points are inserted first, so an exact (latency, energy) tie
+    keeps the model plan — the seed's ``Θ = min(Θ_ω, Θ_σ)`` tie rule.  The
+    front's ``latency_optimal`` plan is therefore exactly what
+    :func:`partition` returns under the default objective."""
+    mf = partition_model_front(dag, resources,
+                               weight_transfer=weight_transfer,
+                               provider=provider, radio_power=radio_power)
+    df = partition_data_front(dag, resources, provider=provider,
+                              radio_power=radio_power)
+    # Θ = min(Θ_ω, Θ_σ), model on ties — the seed's mode pick is the anchor
+    anchor = (mf.latency_optimal
+              if mf.latency_optimal.latency <= df.latency_optimal.latency
+              else df.latency_optimal)
+    return ParetoFront.build(list(mf) + list(df), anchor=anchor, width=width)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,32 @@
+"""Cluster fingerprinting — one hash shared by calibration and plan caching.
+
+A calibration (and therefore a cached plan frontier) is only valid for the
+hardware it was computed against, so both ``CalibrationStore`` paths and
+``PlanCache`` keys start with a fingerprint of the cluster's declared
+topology: node and processor names, datasheet rates, link bandwidths, and
+affinity tables.  Any change to the fleet — a board swapped, a link
+upgraded, an affinity retuned — changes the fingerprint and cleanly
+invalidates both stores at once.  Keeping the hash here (rather than
+duplicated in each subsystem) is what guarantees the two key spaces cannot
+drift apart.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+
+from .cost_model import Cluster
+
+
+def cluster_fingerprint(cluster: Cluster) -> str:
+    """A 16-hex-digit digest of the cluster's declared topology."""
+    spec = [
+        (n.name, n.net_bw, n.default_processor,
+         [(p.name, p.kind, p.peak_flops, p.local_bw, list(p.affinity))
+          for p in n.processors])
+        for n in cluster.nodes
+    ]
+    digest = hashlib.sha256(
+        json.dumps(spec, sort_keys=True).encode()).hexdigest()
+    return digest[:16]

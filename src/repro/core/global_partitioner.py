@@ -15,6 +15,7 @@ from .cost_model import (Cluster, CostProvider, Node, Resource,
                          node_as_resource)
 from .dag import DataPartition, ModelDAG, ModelPartition, Partition
 from .objective import Objective
+from .pareto import ParetoFront, ParetoPoint
 from . import dp_partitioner
 
 
@@ -61,7 +62,12 @@ def plan_global(dag: ModelDAG, cluster: Cluster, *, delta: float = 1.0,
     radio = objective.radio_power if objective is not None else 0.0
     energy = dp_partitioner.predicted_energy(dag, resources, plan, provider,
                                              radio_power=radio)
+    return _as_global_plan(plan, nodes, energy)
 
+
+def _as_global_plan(plan: Partition, nodes: Sequence[Node],
+                    energy: float) -> GlobalPlan:
+    """Map a winning Partition back onto cluster nodes."""
     assignments: list[GlobalAssignment] = []
     if isinstance(plan, ModelPartition):
         for si in range(plan.num_stages):
@@ -80,3 +86,30 @@ def plan_global(dag: ModelDAG, cluster: Cluster, *, delta: float = 1.0,
                       assignments=tuple(assignments),
                       predicted_latency=plan.predicted_latency,
                       predicted_energy=energy)
+
+
+def plan_global_front(dag: ModelDAG, cluster: Cluster, *, delta: float = 1.0,
+                      weight_transfer: bool = False,
+                      capacity: str = "sum",
+                      provider: CostProvider | None = None,
+                      radio_power: float = 0.0,
+                      width: int | None = None) -> ParetoFront:
+    """Tier-1 frontier: every non-dominated (latency, energy) trade-off over
+    both partitioning modes, mapped onto nodes as :class:`GlobalPlan`\\ s.
+
+    The front's ``latency_optimal`` plan is exactly what :func:`plan_global`
+    returns under the default objective (the seed DP, bit-identical);
+    ``radio_power`` prices wireless transfer seconds into every point's
+    energy, matching what a scalarized pass would have minimized."""
+    nodes = cluster.available_nodes()
+    if not nodes:
+        raise RuntimeError("no available nodes in cluster (A(N_φ) all-zero)")
+    resources = [node_as_resource(n, delta, capacity=capacity) for n in nodes]
+    pf = dp_partitioner.partition_front(dag, resources,
+                                        weight_transfer=weight_transfer,
+                                        provider=provider,
+                                        radio_power=radio_power, width=width)
+    return ParetoFront([
+        ParetoPoint(p.latency, p.energy,
+                    _as_global_plan(p.plan, nodes, p.energy))
+        for p in pf])

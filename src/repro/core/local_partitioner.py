@@ -20,6 +20,7 @@ from .cost_model import (CostProvider, Node, Resource, resolve_provider,
                          processors_as_resources)
 from .dag import DataPartition, ModelDAG, ModelPartition, Partition
 from .objective import Objective, resolve_objective
+from .pareto import ParetoFront, ParetoPoint
 from . import dp_partitioner
 
 
@@ -56,6 +57,26 @@ def plan_local(sub_dag: ModelDAG, node: Node, *, delta: float = 1.0,
     return LocalPlan(node_name=node.name, mode=mode, partition=plan,
                      predicted_latency=plan.predicted_latency,
                      predicted_energy=energy)
+
+
+def plan_local_front(sub_dag: ModelDAG, node: Node, *, delta: float = 1.0,
+                     provider: CostProvider | None = None,
+                     width: int | None = None) -> ParetoFront:
+    """Tier-2 frontier: the node's own latency–energy trade-offs for
+    ``sub_dag`` over its processors.  No radio term — intra-node transfers
+    are DRAM copies, not wireless.  The front's ``latency_optimal`` plan is
+    exactly :func:`plan_local`'s answer under the default objective."""
+    kind = dominant_kind(sub_dag)
+    resources = processors_as_resources(node, delta, kind)
+    pf = dp_partitioner.partition_front(sub_dag, resources, provider=provider,
+                                        width=width)
+    points = []
+    for p in pf:
+        mode = "model" if isinstance(p.plan, ModelPartition) else "data"
+        points.append(ParetoPoint(p.latency, p.energy, LocalPlan(
+            node_name=node.name, mode=mode, partition=p.plan,
+            predicted_latency=p.latency, predicted_energy=p.energy)))
+    return ParetoFront(points)
 
 
 def p1_plan(sub_dag: ModelDAG, node: Node, *, delta: float = 1.0,

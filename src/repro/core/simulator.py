@@ -155,13 +155,34 @@ class EdgeSimulator:
     observation per executed compute shard — the run-time scheduler's
     measured latencies *and joules*, so both latency and energy drift are
     caught.  ``objective`` sets the default planning objective for every
-    request; a ``SimRequest.objective`` overrides it per request."""
+    request; a ``SimRequest.objective`` overrides it per request.
+    ``plan_cache`` (a ``repro.serving.plan_cache.PlanCache`` over this
+    cluster) replaces per-request strategy calls with cached-frontier
+    selection: the first request per (dag, δ, calibration version) pays the
+    frontier pass, every later one selects in microseconds — each request's
+    arrival-time planning overhead reflects whichever path it took, so
+    planner amortization shows up in simulated completion times exactly as
+    it would in serving.  The cache's *planner config* then owns planning
+    (HiDP, and the provider baked into ``cache.planner.config``), so
+    combining it with a baseline ``strategy`` or a simulator-level
+    ``provider`` is rejected rather than silently mislabelling results."""
 
     def __init__(self, cluster: Cluster, strategy: str | Strategy = "hidp",
                  leader: str | None = None,
                  provider: CostProvider | None = None,
                  ground_truth=None, feedback=None,
-                 objective: Objective | None = None):
+                 objective: Objective | None = None,
+                 plan_cache=None):
+        if plan_cache is not None:
+            if not (strategy == "hidp" or strategy is STRATEGIES["hidp"]):
+                raise ValueError(
+                    "plan_cache replaces per-request planning with the "
+                    "cache's own HiDPPlanner; it cannot simulate strategy "
+                    f"{strategy!r} — drop plan_cache or use strategy='hidp'")
+            if provider is not None:
+                raise ValueError(
+                    "plan_cache ignores the simulator-level provider; set "
+                    "the provider on the cache's PlannerConfig instead")
         self.cluster = cluster
         self.strategy: Strategy = (STRATEGIES[strategy]
                                    if isinstance(strategy, str) else strategy)
@@ -170,6 +191,7 @@ class EdgeSimulator:
         self.ground_truth = ground_truth
         self.feedback = feedback
         self.objective = objective
+        self.plan_cache = plan_cache
         # capacity-1 resources
         self.proc_busy: dict[tuple[str, str], float] = {}
         self.medium_busy: float = 0.0
@@ -275,14 +297,17 @@ class EdgeSimulator:
 
     # ----------------------------------------------------------- one request
     def _run_request(self, req: SimRequest) -> RequestRecord:
-        kwargs = {}
-        if self.provider is not None:
-            kwargs["provider"] = self.provider
         objective = req.objective or self.objective
-        if objective is not None:
-            kwargs["objective"] = objective
-        plan: HiDPPlan = self.strategy(req.dag, self.cluster, req.delta,
-                                       **kwargs)
+        if self.plan_cache is not None:
+            plan: HiDPPlan = self.plan_cache.get(req.dag, objective=objective,
+                                                 delta=req.delta)
+        else:
+            kwargs = {}
+            if self.provider is not None:
+                kwargs["provider"] = self.provider
+            if objective is not None:
+                kwargs["objective"] = objective
+            plan = self.strategy(req.dag, self.cluster, req.delta, **kwargs)
         t = req.arrival + plan.planning_seconds      # DP overhead (~15 ms)
         gp = plan.global_plan
         energy = 0.0
@@ -352,10 +377,11 @@ def simulate(cluster: Cluster, strategy: str | Strategy,
              workload: Iterable[tuple[float, ModelDAG, float]],
              *, provider: CostProvider | None = None,
              ground_truth=None, feedback=None,
-             objective: Objective | None = None) -> SimReport:
+             objective: Objective | None = None,
+             plan_cache=None) -> SimReport:
     sim = EdgeSimulator(cluster, strategy, provider=provider,
                         ground_truth=ground_truth, feedback=feedback,
-                        objective=objective)
+                        objective=objective, plan_cache=plan_cache)
     reqs = [SimRequest(i, dag, t, delta)
             for i, (t, dag, delta) in enumerate(workload)]
     return sim.run(reqs)

@@ -20,10 +20,13 @@ When a resource crosses ``threshold`` on either statistic, the loop
   1. hard-refits that resource's predictors from its most recent
      observations (the post-change regime, not the stale buffer),
   2. replaces their reference snapshots with the new fits,
-  3. fires ``on_drift`` exactly once — the hook that re-enters EXPLORE:
+  3. bumps ``calibration_version`` — the counter plan caches key on
+     (``repro.serving.plan_cache.PlanCache`` wired as ``version_source``
+     sees every cached frontier invalidate atomically at this instant),
+  4. fires ``on_drift`` exactly once — the hook that re-enters EXPLORE:
      ``runtime.elastic.ElasticController.on_drift`` for the TPU runtime,
      or any re-planning callback for the edge simulator,
-  4. resets the drift windows so the refitted model gets a clean slate.
+  5. resets the drift windows so the refitted model gets a clean slate.
 
 A drift event therefore costs one re-plan, not one per observation.
 """
@@ -51,7 +54,8 @@ class FeedbackLoop:
                  window: int = 6,
                  min_observations: int = 3,
                  buffer_size: int = 64,
-                 on_drift: Callable[[], object] | None = None):
+                 on_drift: Callable[[], object] | None = None,
+                 calibration_version: int = 0):
         self.model = model
         self.threshold = threshold
         self.alpha = alpha
@@ -59,6 +63,10 @@ class FeedbackLoop:
         self.on_drift = on_drift
         self.observations = 0
         self.replans = 0
+        # monotone counter a PlanCache keys cached frontiers on: seed it
+        # with the CalibrationStore version the model was loaded at, and
+        # every drift event advances it (invalidating those fronts)
+        self.calibration_version = calibration_version
         self.events: list[DriftEvent] = []
         self._window = window
         self._errors: dict[str, deque[float]] = {}
@@ -158,6 +166,7 @@ class FeedbackLoop:
     def _trip(self, key: str, drift_now: float, metric: str) -> bool:
         self._refit_key(key)
         self.replans += 1
+        self.calibration_version += 1      # stale plan fronts die here
         self.events.append(DriftEvent(self.observations, drift_now, metric))
         self._errors.clear()          # fresh slate for the refitted model
         self._energy_errors.clear()

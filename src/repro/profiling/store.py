@@ -12,12 +12,12 @@ history (the per-request plan cache can key on ``(fingerprint, version)``).
 
 from __future__ import annotations
 
-import hashlib
 import json
 import pathlib
 import time
 
 from repro.core.cost_model import Cluster
+from repro.core.fingerprint import cluster_fingerprint
 
 from .learned import LearnedCostModel
 
@@ -28,17 +28,9 @@ class CalibrationStore:
         self.root.mkdir(parents=True, exist_ok=True)
 
     # ----------------------------------------------------------- fingerprint
-    @staticmethod
-    def fingerprint(cluster: Cluster) -> str:
-        spec = [
-            (n.name, n.net_bw, n.default_processor,
-             [(p.name, p.kind, p.peak_flops, p.local_bw, list(p.affinity))
-              for p in n.processors])
-            for n in cluster.nodes
-        ]
-        digest = hashlib.sha256(
-            json.dumps(spec, sort_keys=True).encode()).hexdigest()
-        return digest[:16]
+    # Shared with repro.serving.plan_cache.PlanCache so calibration paths and
+    # plan-cache keys can never hash the cluster differently.
+    fingerprint = staticmethod(cluster_fingerprint)
 
     def _dir(self, cluster: Cluster) -> pathlib.Path:
         return self.root / self.fingerprint(cluster)

@@ -1,0 +1,11 @@
+"""repro.serving — the serving tier: continuous-batching engine + plan cache.
+
+``ServingEngine`` executes (the paper's Run-time Scheduler FSM, Fig. 4);
+``PlanCache`` keeps planning off the hot path: one frontier pass per
+``(cluster fingerprint, calibration version, dag)``, every request objective
+served by selection until a FeedbackLoop drift event bumps the version.
+See docs/planning.md for the cache lifecycle.
+"""
+
+from .engine import Request, ServingEngine  # noqa: F401
+from .plan_cache import PlanCache  # noqa: F401

@@ -56,11 +56,20 @@ class ServingEngine:
     in-flight traffic asked for and exposes :meth:`dominant_objective` so an
     ``on_replan`` callback can hand the right ``Objective`` to the next
     planning pass (e.g. battery-saver clients requesting ``energy`` flip the
-    fleet to energy-optimal plans once they dominate the batch)."""
+    fleet to energy-optimal plans once they dominate the batch).
+
+    ``plan_cache`` (a ``repro.serving.plan_cache.PlanCache``) + ``plan_dag``
+    (the ModelDAG describing the served workload) put planning on the cached
+    frontier: every ``submit`` resolves its request's objective against the
+    cached front — zero DP work after the first request — and a drift event
+    re-enters EXPLORE with exactly one frontier re-plan, selected at the
+    then-dominant objective.  Wire the same ``feedback`` loop as the cache's
+    ``version_source`` and the bump is atomic with the refit."""
 
     def __init__(self, model: Model, params: dict, *, max_batch: int = 4,
                  max_len: int = 128, plan=None, donate: bool = True,
-                 feedback=None, on_replan: Callable[[], Any] | None = None):
+                 feedback=None, on_replan: Callable[[], Any] | None = None,
+                 plan_cache=None, plan_dag=None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -68,6 +77,13 @@ class ServingEngine:
         self.plan = plan
         self.feedback = feedback
         self.on_replan = on_replan
+        if (plan_cache is None) != (plan_dag is None):
+            raise ValueError(
+                "plan_cache and plan_dag go together: the cache needs the "
+                "served workload's ModelDAG to resolve objectives against "
+                "its frontier — pass both or neither")
+        self.plan_cache = plan_cache
+        self.plan_dag = plan_dag
         self.replans = 0
         self._decode_steps = 0
         self.cache = model.init_cache(max_batch, max_len)
@@ -89,12 +105,17 @@ class ServingEngine:
                eos_id: int | None = None,
                objective: str = "latency") -> int:
         """Queue one request.  ``objective`` names the planning metric this
-        request wants (``"latency"`` | ``"energy"`` | ``"edp"``)."""
+        request wants (``"latency"`` | ``"energy"`` | ``"edp"``).  With a
+        ``plan_cache`` wired, the objective is resolved against the cached
+        plan frontier right here — a lookup + select, no DP pass."""
         if objective not in METRICS:
             raise ValueError(f"unknown objective {objective!r}; "
                              f"expected one of {METRICS}")
         rid = self._next_id
         self._next_id += 1
+        if self.plan_cache is not None and self.plan_dag is not None:
+            self.plan = self.plan_cache.get(self.plan_dag,
+                                            objective=objective)
         self.queue.append(Request(rid, np.asarray(prompt, np.int32),
                                   max_new_tokens, eos_id,
                                   objective=objective))
@@ -104,16 +125,19 @@ class ServingEngine:
         return sum(r is not None for r in self.slot_req)
 
     def dominant_objective(self) -> str:
-        """The most-requested objective among queued + in-flight requests
-        (ties break latency > energy > edp; empty engine → "latency") — what
-        an ``on_replan`` callback should hand the next planning pass."""
-        counts = {"latency": 0, "energy": 0, "edp": 0}
+        """The most-requested objective among queued + in-flight requests —
+        what an ``on_replan`` callback (and the post-drift cache re-plan)
+        hands the next planning pass.  Tie-breaking is deterministic by the
+        fixed ``METRICS`` order (latency > energy > edp; empty engine →
+        "latency"), so re-plan objectives — and therefore cache behaviour —
+        are reproducible across runs regardless of dict or arrival order."""
+        counts = dict.fromkeys(METRICS, 0)
         for r in self.queue:
             counts[r.objective] += 1
         for r in self.slot_req:
             if r is not None:
                 counts[r.objective] += 1
-        return max(counts, key=counts.get)
+        return max(METRICS, key=counts.__getitem__)
 
     def run_until_done(self, max_steps: int = 10_000) -> dict[int, Request]:
         for _ in range(max_steps):
@@ -214,6 +238,13 @@ class ServingEngine:
                 self.state = State.EXPLORE
                 self.trace.append(self.state)
                 self.replans += 1
+                if self.plan_cache is not None and self.plan_dag is not None:
+                    # the drift already bumped the calibration version (via
+                    # version_source or this on_drift); re-plan exactly once,
+                    # at the objective the in-flight traffic wants
+                    self.plan_cache.on_drift()
+                    self.plan = self.plan_cache.get(
+                        self.plan_dag, objective=self.dominant_objective())
                 if self.on_replan is not None:
                     self.on_replan()
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))

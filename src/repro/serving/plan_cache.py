@@ -1,0 +1,166 @@
+"""PlanCache — versioned plan frontiers on the serving hot path.
+
+The paper pays its ~15 ms two-tier DP on *every* request; CoEdge
+(arXiv:2012.03257) amortizes partition decisions across requests and DEFER
+(arXiv:2201.06769) computes them once ahead of serving.  This cache gets
+both: one (objective-independent) frontier pass per
+``(cluster fingerprint, calibration version, dag name, δ)``, then any
+request's objective is resolved against the cached
+:class:`~repro.core.pareto.ParetoFront` with zero DP work — a dict lookup
+plus an O(front-width) ``select``.
+
+Keys and invalidation:
+
+* the **cluster fingerprint** comes from the shared
+  :func:`repro.core.fingerprint.cluster_fingerprint` — the same hash that
+  files calibrations in ``CalibrationStore``, so plan-cache keys and
+  calibration paths can never drift apart.  A board swap or link upgrade
+  changes the fingerprint and cleanly orphans every cached front.
+* the **calibration version** either lives in the cache
+  (:meth:`bump_version`) or is read live from a ``version_source`` — any
+  object with a ``calibration_version`` attribute, e.g. a
+  ``repro.profiling.FeedbackLoop``, whose drift events increment it.
+  Either way a bump is **atomic**: the version and the entry table swap in
+  a single reference assignment, so a concurrent reader sees either the
+  old generation (stale front, still internally consistent) or the new
+  empty one — never a half-invalidated mix.
+* after a bump, the next lookup per dag misses exactly once and pays one
+  EXPLORE re-plan (the frontier pass); every other objective variation for
+  that dag is a hit again.
+
+``get`` stamps the returned plan's ``planning_seconds`` with what the
+caller actually waited — the full frontier pass on a miss, the lookup
+microseconds on a hit — so simulators and benchmarks measure the warm path
+honestly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core.cost_model import Cluster
+from repro.core.dag import ModelDAG
+from repro.core.fingerprint import cluster_fingerprint
+from repro.core.hidp import HiDPPlan, HiDPPlanner
+from repro.core.objective import Objective
+from repro.core.pareto import ParetoFront
+
+
+class PlanCache:
+    """Cached plan frontiers for one cluster, served by one planner.
+
+    Attributes:
+        planner: the :class:`~repro.core.hidp.HiDPPlanner` that computes
+            frontiers on a miss (its config fixes provider, radio pricing,
+            and the default δ).
+        fingerprint: the cluster's topology hash (shared with
+            ``CalibrationStore``).
+        hits / misses / invalidations: lifetime counters; ``misses`` counts
+            EXPLORE re-plans (full frontier passes).
+    """
+
+    def __init__(self, planner: HiDPPlanner, cluster: Cluster, *,
+                 version: int = 0, version_source=None):
+        self.planner = planner
+        self.cluster = cluster
+        self.fingerprint = cluster_fingerprint(cluster)
+        self._version_source = version_source
+        if version_source is not None:
+            version = version_source.calibration_version
+        # one atomically-swapped generation: (version, {key: front})
+        self._generation: tuple[int, dict[tuple, ParetoFront]] = \
+            (int(version), {})
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+
+    # -------------------------------------------------------------- keying
+    @property
+    def version(self) -> int:
+        """The calibration version cached fronts are valid for — read live
+        from ``version_source`` when one is wired, so a FeedbackLoop drift
+        event invalidates without calling into the cache at all."""
+        if self._version_source is not None:
+            return int(self._version_source.calibration_version)
+        return self._generation[0]
+
+    def key(self, dag_name: str, delta: float | None = None) -> tuple:
+        """``(cluster fingerprint, calibration version, dag name, δ)``."""
+        if delta is None:
+            delta = self.planner.config.delta
+        return (self.fingerprint, self.version, dag_name, delta)
+
+    # ------------------------------------------------------------- lookups
+    def front(self, dag: ModelDAG, delta: float | None = None) -> ParetoFront:
+        """The cached frontier for ``dag`` — one DP pass per generation."""
+        key = self.key(dag.name, delta)
+        version, fronts = self._generation
+        if version != key[1]:
+            # version_source moved on: start a fresh generation atomically
+            version, fronts = key[1], {}
+            self._generation = (version, fronts)
+            self.invalidations += 1
+        front = fronts.get(key)
+        if front is None:
+            self.misses += 1
+            planner = (self.planner if delta is None
+                       else self.planner.at_delta(delta))
+            front = planner.front(dag, self.cluster)
+            fronts[key] = front
+        else:
+            self.hits += 1
+        return front
+
+    def get(self, dag: ModelDAG, objective: Objective | str | None = None,
+            delta: float | None = None) -> HiDPPlan:
+        """Resolve one request: select ``objective`` over the cached front.
+        Zero DP work on a hit.  ``objective`` may be an
+        :class:`~repro.core.objective.Objective` or a metric name
+        (``"latency"`` | ``"energy"`` | ``"edp"``)."""
+        if isinstance(objective, str):
+            objective = Objective(objective)
+        t0 = time.perf_counter()
+        misses = self.misses
+        front = self.front(dag, delta)
+        plan = front.select(objective)
+        if misses != self.misses:
+            return plan          # cold: keep the frontier pass's own timing
+        return dataclasses.replace(
+            plan, planning_seconds=time.perf_counter() - t0)
+
+    # -------------------------------------------------------- invalidation
+    def bump_version(self, version: int | None = None) -> int:
+        """Atomically invalidate every cached front: the (version, table)
+        pair swaps in one assignment.  No-op counter-wise when a
+        ``version_source`` drives the version (it already moved)."""
+        if self._version_source is not None:
+            raise RuntimeError(
+                "version is driven by version_source; bump it there "
+                "(FeedbackLoop drift events do this automatically)")
+        new = self._generation[0] + 1 if version is None else int(version)
+        self._generation = (new, {})
+        self.invalidations += 1
+        return new
+
+    def on_drift(self) -> None:
+        """Hook for ``FeedbackLoop(on_drift=cache.on_drift)`` when no
+        version_source is wired: one drift event → one atomic bump → the
+        next lookup per dag is the single EXPLORE re-plan."""
+        if self._version_source is None:
+            self.bump_version()
+
+    # --------------------------------------------------------------- stats
+    def __len__(self) -> int:
+        return len(self._generation[1])
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "invalidations": self.invalidations,
+                "entries": len(self), "version": self.version,
+                "fingerprint": self.fingerprint,
+                "hit_rate": self.hit_rate()}

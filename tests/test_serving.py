@@ -103,6 +103,93 @@ def test_engine_feedback_reenters_explore_on_drift(small_lm):
     assert pred is not None and pred > 1e-7
 
 
+def test_dominant_objective_tie_break_is_deterministic(small_lm):
+    """Ties resolve by the fixed METRICS order (latency > energy > edp),
+    never by arrival or dict order — cache keys and re-plan objectives must
+    be reproducible across runs."""
+    cfg, model, params = small_lm
+    eng = ServingEngine(model, params, max_batch=2, max_len=32)
+    # 1 edp vs 1 energy (latency 0): energy wins — METRICS order
+    eng.submit(np.asarray([1], np.int32), max_new_tokens=2, objective="edp")
+    eng.submit(np.asarray([2], np.int32), max_new_tokens=2,
+               objective="energy")
+    assert eng.dominant_objective() == "energy"
+    # 1 latency / 1 energy / 1 edp: latency wins the three-way tie
+    eng.submit(np.asarray([3], np.int32), max_new_tokens=2,
+               objective="latency")
+    assert eng.dominant_objective() == "latency"
+    # a clear majority still wins regardless of order
+    eng.submit(np.asarray([4], np.int32), max_new_tokens=2, objective="edp")
+    eng.submit(np.asarray([5], np.int32), max_new_tokens=2, objective="edp")
+    assert eng.dominant_objective() == "edp"
+
+
+def _toy_cache():
+    """A PlanCache over the paper cluster for a small synthetic workload."""
+    from repro.core import (Block, HiDPPlanner, ModelDAG, Objective,
+                            PlannerConfig)
+    from repro.core.edge_models import battery_cluster
+    from repro.serving import PlanCache
+
+    blocks = tuple(Block(name=f"b{i}", flops=2e9, param_bytes=1e6,
+                         bytes_in=4e5, bytes_out=4e5, kind="conv")
+                   for i in range(6))
+    dag = ModelDAG(name="toy", blocks=blocks, input_bytes=4e5,
+                   output_bytes=4e5)
+    cluster = battery_cluster()
+    planner = HiDPPlanner(PlannerConfig(
+        objective=Objective("energy", radio_power=4.0)))
+    return PlanCache(planner, cluster), dag
+
+
+def test_engine_submit_resolves_objectives_from_plan_cache(small_lm):
+    """Mixed-objective traffic is served from one cached frontier: the
+    first submit pays the DP pass, every later submit is a hit."""
+    cfg, model, params = small_lm
+    cache, dag = _toy_cache()
+    eng = ServingEngine(model, params, max_batch=2, max_len=32,
+                        plan_cache=cache, plan_dag=dag)
+    from repro.core import Objective
+
+    objectives = ("latency", "energy", "edp", "energy")
+    for i, obj in enumerate(objectives):
+        eng.submit(np.asarray([i + 1, 2], np.int32), max_new_tokens=2,
+                   objective=obj)
+    assert cache.misses == 1 and cache.hits == len(objectives) - 1
+    # the engine's current plan is the last request's selection off the front
+    want = cache.front(dag).select(Objective("energy"))
+    assert eng.plan.global_plan.partition == want.global_plan.partition
+    done = eng.run_until_done()
+    assert len(done) == len(objectives)
+    assert cache.misses == 1                    # execution never re-plans
+
+
+def test_engine_drift_triggers_exactly_one_cache_replan(small_lm):
+    """Drift while serving: the calibration version bumps, the cached
+    frontier invalidates, and the engine re-enters EXPLORE with exactly one
+    frontier re-plan at the dominant objective."""
+    from repro.core.scheduler import State
+    from repro.profiling import FeedbackLoop, LearnedCostModel
+
+    cfg, model, params = small_lm
+    cache, dag = _toy_cache()
+    beliefs = LearnedCostModel()
+    beliefs.fit_entry("engine/decode", "decode",
+                      [(1.0, 0.0, 1e-9), (2.0, 0.0, 2e-9)])
+    fb = FeedbackLoop(beliefs, threshold=0.75)
+    eng = ServingEngine(model, params, max_batch=1, max_len=64,
+                        feedback=fb, plan_cache=cache, plan_dag=dag)
+    rid = eng.submit(np.asarray([5, 9, 2], np.int32), max_new_tokens=40,
+                     objective="energy")
+    done = eng.run_until_done()
+    assert done[rid].done
+    assert eng.replans >= 1 and State.EXPLORE in eng.trace
+    # one miss to warm the cache + one EXPLORE re-plan per drift event
+    assert cache.misses == 1 + eng.replans
+    assert cache.invalidations == eng.replans
+    assert cache.version == eng.replans
+
+
 def test_engine_per_request_objective(small_lm):
     """Requests carry a planning objective; the engine tracks the dominant
     one across queued + in-flight traffic and rejects unknown metrics."""
