@@ -2,13 +2,22 @@
 including both tiers ≈ 15 ms per request on average) + the plan-cache
 amortization table: a cold frontier pass per (cluster, calibration, dag)
 vs. warm cached lookups serving any objective — the CoEdge/DEFER-style
-amortization that takes the ~15 ms DP off the serving hot path.  The warm
-path must be ≥ 100× faster than cold planning (gated; run as a script the
-exit code reports it, so CI can smoke it)."""
+amortization that takes the ~15 ms DP off the serving hot path.  Two gates
+(run as a script the exit code reports both, so CI can smoke them):
+
+* warm cached lookups must be ≥ 100× faster than cold planning on every
+  model;
+* **restart-warm**: after persisting warm fronts to a
+  ``CalibrationStore`` and constructing a fresh ``PlanCache`` from it,
+  every tenant's first request must be served with **zero DP/frontier
+  work**, and every selection off a loaded front must be bit-identical to
+  the selection off the freshly built one.
+"""
 
 from __future__ import annotations
 
 import sys
+import tempfile
 import time
 
 import numpy as np
@@ -16,6 +25,7 @@ import numpy as np
 from repro.core import (HiDPPlanner, Objective, PlannerConfig, plan)
 from repro.core.edge_models import EDGE_MODELS, MODEL_DELTA, paper_cluster
 from repro.core.objective import METRICS
+from repro.profiling import CalibrationStore
 from repro.serving import PlanCache
 
 from .common import emit
@@ -53,7 +63,9 @@ def main() -> dict:
           f"p95 {p95_ms:.1f} ms (paper: ~15 ms)")
 
     cache_stats = plan_cache_table(cluster)
-    return {"mean_ms": mean_ms, "p95_ms": p95_ms, "cache": cache_stats}
+    restart_stats = restart_warm_table(cluster)
+    return {"mean_ms": mean_ms, "p95_ms": p95_ms, "cache": cache_stats,
+            "restart": restart_stats}
 
 
 # --------------------------------------------------------------------------
@@ -113,6 +125,65 @@ def plan_cache_table(cluster) -> dict:
     return out
 
 
+# --------------------------------------------------------------------------
+# Restart-warm serving: persisted fronts skip the cold pass entirely
+# --------------------------------------------------------------------------
+
+def restart_warm_table(cluster) -> dict:
+    """Warm a cache over every paper workload, persist its fronts next to
+    the calibrations, construct a *fresh* ``PlanCache`` from the store
+    (the restart), and serve every tenant × objective again.  Gated on:
+    zero DP/frontier work after the restart, and bit-identical selections
+    off the loaded fronts."""
+    planner = HiDPPlanner(PlannerConfig(
+        objective=Objective("energy", radio_power=4.0)))
+    store = CalibrationStore(tempfile.mkdtemp(prefix="hidp_fronts_"))
+    warm = PlanCache(planner, cluster)
+    built = {}
+    for name, fn in EDGE_MODELS.items():
+        dag = fn()
+        for metric in METRICS:
+            built[(name, metric)] = warm.get(dag, metric,
+                                             delta=MODEL_DELTA[name])
+    persisted = warm.persist(store)
+
+    fresh = PlanCache(planner, cluster, store=store)    # the restart
+    print("\n== restart-warm: fresh PlanCache from CalibrationStore ==")
+    print(f"{'model':18s}{'first-request us':>17}{'DP passes':>11}"
+          f"{'identical':>11}")
+    identical_all = True
+    for name, fn in EDGE_MODELS.items():
+        dag = fn()
+        misses0 = fresh.misses
+        t0 = time.perf_counter()
+        served = {m: fresh.get(dag, m, delta=MODEL_DELTA[name])
+                  for m in METRICS}
+        first_us = (time.perf_counter() - t0) / len(METRICS) * 1e6
+        identical = all(
+            p.predicted_latency == built[(name, m)].predicted_latency
+            and p.predicted_energy == built[(name, m)].predicted_energy
+            and p.global_plan.partition ==
+            built[(name, m)].global_plan.partition
+            and p.local_plans == built[(name, m)].local_plans
+            for m, p in served.items())
+        identical_all &= identical
+        dp = fresh.misses - misses0
+        print(f"{name:18s}{first_us:17.1f}{dp:11d}"
+              f"{'yes' if identical else 'NO':>11}")
+        emit(f"tab1/restart/{name}", first_us,
+             f"dp_passes={dp};identical={int(identical)}")
+    ok = (fresh.misses == 0 and identical_all
+          and fresh.loaded == persisted == len(EDGE_MODELS))
+    print(f"\n{'PASS' if ok else 'FAIL'}: restart served every tenant with "
+          f"{fresh.misses} DP passes ({fresh.loaded} fronts loaded warm, "
+          f"{persisted} persisted); selections "
+          f"{'bit-identical' if identical_all else 'DIVERGED'} vs the "
+          f"freshly built fronts")
+    return {"persisted": persisted, "loaded": fresh.loaded,
+            "misses": fresh.misses, "identical": identical_all, "pass": ok}
+
+
 if __name__ == "__main__":
     result = main()
-    sys.exit(0 if result["cache"]["pass"] else 1)
+    sys.exit(0 if result["cache"]["pass"] and result["restart"]["pass"]
+             else 1)

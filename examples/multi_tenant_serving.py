@@ -1,0 +1,87 @@
+"""Multi-tenant serving: two DNN workloads share one edge cluster through
+a single persistent, evicting PlanCache (docs/serving.md).
+
+Phase 1 (the cold process) serves a mixed EfficientNet-B0 + VGG-19 request
+stream from one shared cache — each tenant pays exactly one frontier pass —
+prints the cache stats, and persists the warm fronts next to the
+calibrations in a ``CalibrationStore``.
+
+Phase 2 (the restart) re-executes this script in a **fresh interpreter**
+(``--restart``): the new process builds its PlanCache straight from the
+store and serves the same mixed stream with *zero* DP work — no tenant
+ever re-pays the cold pass.
+
+    PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+
+import subprocess
+import sys
+import tempfile
+
+from repro.core import HiDPPlanner, Objective, PlannerConfig, simulate
+from repro.core.edge_models import EDGE_MODELS, MODEL_DELTA, battery_cluster
+from repro.profiling import CalibrationStore
+from repro.serving import LRUEviction, PlanCache
+
+TENANTS = ("efficientnet_b0", "vgg19")
+
+
+def build_cache(store: CalibrationStore | None = None) -> PlanCache:
+    """One cache per cluster: an energy-aware planner, an LRU budget big
+    enough for both tenants, and (optionally) a store to warm from."""
+    planner = HiDPPlanner(PlannerConfig(
+        objective=Objective("energy", radio_power=4.0)))
+    return PlanCache(planner, battery_cluster(),
+                     eviction=LRUEviction(max_entries=8), store=store)
+
+
+def serve_mixed_stream(cache: PlanCache, label: str) -> None:
+    """12 requests alternating between the two tenants, mixed objectives,
+    all resolved from the one shared cache."""
+    for name in TENANTS:
+        dag, delta = EDGE_MODELS[name](), MODEL_DELTA[name]
+        for metric in ("latency", "energy", "edp"):
+            p = cache.get(dag, metric, delta=delta)
+        p = cache.get(dag, "energy", delta=delta)
+        print(f"  {name:18s} energy-optimal "
+              f"{p.predicted_latency * 1e3:6.0f} ms / "
+              f"{p.predicted_energy:5.1f} J  mode={p.mode}")
+    wl = [(0.3 * i, EDGE_MODELS[TENANTS[i % 2]](),
+           MODEL_DELTA[TENANTS[i % 2]]) for i in range(12)]
+    rep = simulate(battery_cluster(), "hidp", wl, plan_cache=cache)
+    s = cache.stats()
+    print(f"  [{label}] served {len(rep.records)} simulated requests — "
+          f"cache: {s['misses']} frontier passes, {s['hits']} hits "
+          f"(hit rate {s['hit_rate']:.3f}), {s['entries']} tenants "
+          f"resident, {s['nbytes']} bytes, {s['evictions']} evictions")
+
+
+def cold_process() -> None:
+    store_dir = tempfile.mkdtemp(prefix="hidp_store_")
+    store = CalibrationStore(store_dir)
+    cache = build_cache()
+    print("cold process: every tenant pays one frontier pass")
+    serve_mixed_stream(cache, "cold")
+    n = cache.persist(store)
+    print(f"persisted {n} warm fronts → "
+          f"{store.fronts_path(cache.cluster)}\n")
+    print("restarting in a fresh interpreter ...")
+    ret = subprocess.run([sys.executable, __file__, "--restart", store_dir])
+    raise SystemExit(ret.returncode)
+
+
+def restarted_process(store_dir: str) -> None:
+    cache = build_cache(store=CalibrationStore(store_dir))
+    print(f"restarted process: {cache.loaded} fronts loaded warm from "
+          f"the store")
+    serve_mixed_stream(cache, "restarted")
+    assert cache.misses == 0, "restart paid a DP pass it should have skipped"
+    print("restart served every tenant with zero DP/frontier work — the "
+          "cold pass ran once, ever")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 2 and sys.argv[1] == "--restart":
+        restarted_process(sys.argv[2])
+    else:
+        cold_process()

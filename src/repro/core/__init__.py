@@ -15,7 +15,7 @@ from .cost_model import (ANALYTIC, AnalyticCostProvider,  # noqa: F401
 from .dag import Block, DataPartition, ModelDAG, ModelPartition, chain  # noqa: F401
 from .objective import LATENCY, Objective, resolve_objective  # noqa: F401
 from .pareto import ParetoFront, ParetoPoint  # noqa: F401
-from .fingerprint import cluster_fingerprint  # noqa: F401
+from .fingerprint import cluster_fingerprint, dag_fingerprint  # noqa: F401
 from .dp_partitioner import (partition, partition_data,  # noqa: F401
                              partition_data_front, partition_front,
                              partition_model, partition_model_front,
@@ -25,7 +25,7 @@ from .global_partitioner import (GlobalPlan, plan_global,  # noqa: F401
 from .local_partitioner import (LocalPlan, p1_plan, plan_local,  # noqa: F401
                                 plan_local_front)
 from .hidp import (HiDPPlan, HiDPPlanner, PlannerConfig, plan,  # noqa: F401
-                   plan_front, sub_dag_for)
+                   plan_from_dict, plan_front, plan_to_dict, sub_dag_for)
 from .baselines import STRATEGIES, STRATEGY_FRONTS  # noqa: F401
 from .scheduler import FollowerFSM, InferenceRequest, LeaderFSM, State  # noqa: F401
 from .cluster import ClusterManager, HeartbeatMonitor  # noqa: F401

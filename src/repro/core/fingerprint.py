@@ -1,4 +1,4 @@
-"""Cluster fingerprinting — one hash shared by calibration and plan caching.
+"""Fingerprinting — the hashes calibration and plan caching key on.
 
 A calibration (and therefore a cached plan frontier) is only valid for the
 hardware it was computed against, so both ``CalibrationStore`` paths and
@@ -6,17 +6,35 @@ hardware it was computed against, so both ``CalibrationStore`` paths and
 topology: node and processor names, datasheet rates, link bandwidths, and
 affinity tables.  Any change to the fleet — a board swapped, a link
 upgraded, an affinity retuned — changes the fingerprint and cleanly
-invalidates both stores at once.  Keeping the hash here (rather than
-duplicated in each subsystem) is what guarantees the two key spaces cannot
-drift apart.
+invalidates both stores at once.
+
+A cached frontier is likewise only valid for the *workload* it was planned
+for, so multi-tenant cache keys carry a :func:`dag_fingerprint` — a digest
+of the block DAG's full cost surface (names, FLOPs, byte counts, kinds,
+splittability) rather than just its name.  Two tenants that happen to share
+a model name but differ in shape can never collide, and editing a model's
+blocks orphans its persisted fronts exactly like a board swap orphans
+calibrations.
+
+Keeping both hashes here (rather than duplicated in each subsystem) is what
+guarantees the key spaces cannot drift apart.
 """
 
 from __future__ import annotations
 
 import hashlib
 import json
+from typing import TYPE_CHECKING
 
 from .cost_model import Cluster
+
+if TYPE_CHECKING:
+    from .dag import ModelDAG
+
+
+def _digest(spec) -> str:
+    return hashlib.sha256(
+        json.dumps(spec, sort_keys=True).encode()).hexdigest()[:16]
 
 
 def cluster_fingerprint(cluster: Cluster) -> str:
@@ -27,6 +45,24 @@ def cluster_fingerprint(cluster: Cluster) -> str:
           for p in n.processors])
         for n in cluster.nodes
     ]
-    digest = hashlib.sha256(
-        json.dumps(spec, sort_keys=True).encode()).hexdigest()
-    return digest[:16]
+    return _digest(spec)
+
+
+def dag_fingerprint(dag: "ModelDAG") -> str:
+    """A 16-hex-digit digest of a workload's identity: every field the cost
+    model prices, so plans cached (or persisted) under this hash can only be
+    served back to the exact same workload.
+
+    Memoized per DAG instance (a direct ``__dict__`` write, which a frozen
+    dataclass permits and its field-based ``__eq__``/``replace`` ignore) —
+    the serving hot path fingerprints on every lookup and must stay at
+    dict-access cost."""
+    cached = dag.__dict__.get("_fingerprint")
+    if cached is None:
+        spec = (dag.name, dag.input_bytes, dag.output_bytes,
+                [(b.name, b.flops, b.param_bytes, b.bytes_in, b.bytes_out,
+                  b.data_splittable, b.halo_fraction, b.kind)
+                 for b in dag.blocks])
+        cached = _digest(spec)
+        dag.__dict__["_fingerprint"] = cached
+    return cached

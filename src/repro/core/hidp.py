@@ -347,6 +347,96 @@ def plan_front(dag: ModelDAG, cluster: Cluster,
     return ParetoFront.build(points, anchor=anchor, width=width)
 
 
+# --------------------------------------------------------------------------
+# Plan serialization — the JSON round-trip persisted fronts ride on
+# --------------------------------------------------------------------------
+
+def _partition_to_dict(p: ModelPartition | DataPartition) -> dict:
+    if isinstance(p, ModelPartition):
+        return {"mode": "model", "boundaries": list(p.boundaries),
+                "assignment": list(p.assignment),
+                "predicted_latency": p.predicted_latency}
+    return {"mode": "data", "fractions": list(p.fractions),
+            "assignment": list(p.assignment),
+            "predicted_latency": p.predicted_latency}
+
+
+def _partition_from_dict(d: dict) -> ModelPartition | DataPartition:
+    if d["mode"] == "model":
+        return ModelPartition(boundaries=tuple(d["boundaries"]),
+                              assignment=tuple(d["assignment"]),
+                              predicted_latency=d["predicted_latency"])
+    return DataPartition(fractions=tuple(d["fractions"]),
+                         assignment=tuple(d["assignment"]),
+                         predicted_latency=d["predicted_latency"])
+
+
+def plan_to_dict(plan: HiDPPlan) -> dict:
+    """A JSON-able view of a two-tier plan.  Nodes are stored by *name*
+    only: a persisted plan is always filed under its cluster's fingerprint,
+    so the loader (:func:`plan_from_dict`) reattaches the full ``Node``
+    objects from a cluster guaranteed topology-identical to the writer's."""
+    gp = plan.global_plan
+    return {
+        "dag_name": plan.dag_name,
+        "predicted_latency": plan.predicted_latency,
+        "predicted_energy": plan.predicted_energy,
+        "planning_seconds": plan.planning_seconds,
+        "extra_comm_bytes": plan.extra_comm_bytes,
+        "extra_latency": plan.extra_latency,
+        "global_plan": {
+            "mode": gp.mode,
+            "partition": _partition_to_dict(gp.partition),
+            "predicted_latency": gp.predicted_latency,
+            "predicted_energy": gp.predicted_energy,
+            "assignments": [
+                {"node": a.node.name, "block_range": list(a.block_range)
+                 if a.block_range is not None else None,
+                 "fraction": a.fraction, "stage_index": a.stage_index}
+                for a in gp.assignments],
+        },
+        "local_plans": [
+            {"node_name": lp.node_name, "mode": lp.mode,
+             "partition": _partition_to_dict(lp.partition),
+             "predicted_latency": lp.predicted_latency,
+             "predicted_energy": lp.predicted_energy}
+            for lp in plan.local_plans],
+    }
+
+
+def plan_from_dict(d: dict, cluster: Cluster) -> HiDPPlan:
+    """Rebuild a persisted plan against ``cluster``; bit-identical to the
+    plan :func:`plan_to_dict` serialized whenever the cluster's fingerprint
+    matches the writer's (the persistence layer enforces that)."""
+    nodes = {n.name: n for n in cluster.nodes}
+    gd = d["global_plan"]
+    assignments = tuple(
+        GlobalAssignment(
+            node=nodes[a["node"]],
+            block_range=tuple(a["block_range"])
+            if a["block_range"] is not None else None,
+            fraction=a["fraction"], stage_index=a["stage_index"])
+        for a in gd["assignments"])
+    gp = GlobalPlan(mode=gd["mode"],
+                    partition=_partition_from_dict(gd["partition"]),
+                    assignments=assignments,
+                    predicted_latency=gd["predicted_latency"],
+                    predicted_energy=gd["predicted_energy"])
+    locals_ = tuple(
+        LocalPlan(node_name=ld["node_name"], mode=ld["mode"],
+                  partition=_partition_from_dict(ld["partition"]),
+                  predicted_latency=ld["predicted_latency"],
+                  predicted_energy=ld["predicted_energy"])
+        for ld in d["local_plans"])
+    return HiDPPlan(dag_name=d["dag_name"], global_plan=gp,
+                    local_plans=locals_,
+                    predicted_latency=d["predicted_latency"],
+                    predicted_energy=d["predicted_energy"],
+                    planning_seconds=d["planning_seconds"],
+                    extra_comm_bytes=d["extra_comm_bytes"],
+                    extra_latency=d["extra_latency"])
+
+
 class HiDPPlanner:
     """First-class two-tier planner: one configuration, frontier output.
 

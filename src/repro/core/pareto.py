@@ -26,7 +26,7 @@ Invariants every :class:`ParetoFront` maintains:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterable, Iterator, Sequence
+from typing import Any, Callable, Iterable, Iterator, Sequence
 
 from .objective import Objective, resolve_objective
 
@@ -52,6 +52,21 @@ class ParetoPoint:
         return (self.latency <= other.latency and self.energy <= other.energy
                 and (self.latency < other.latency
                      or self.energy < other.energy))
+
+    # -------------------------------------------------------- serialization
+    def to_dict(self, encode_plan: Callable[[Any], Any] = lambda p: p
+                ) -> dict:
+        """A JSON-able view; ``encode_plan`` serializes the plan payload
+        (e.g. ``repro.core.hidp.plan_to_dict`` for :class:`HiDPPlan`)."""
+        return {"latency": self.latency, "energy": self.energy,
+                "plan": encode_plan(self.plan)}
+
+    @classmethod
+    def from_dict(cls, d: dict,
+                  decode_plan: Callable[[Any], Any] = lambda p: p
+                  ) -> "ParetoPoint":
+        return cls(latency=d["latency"], energy=d["energy"],
+                   plan=decode_plan(d["plan"]))
 
 
 class ParetoFront:
@@ -139,6 +154,26 @@ class ParetoFront:
 
     def select(self, objective: Objective | None = None):
         return self.select_point(objective).plan
+
+    # -------------------------------------------------------- serialization
+    def to_dict(self, encode_plan: Callable[[Any], Any] = lambda p: p
+                ) -> dict:
+        """JSON round-trip out: the sorted point list, plans encoded by
+        ``encode_plan``.  ``from_dict(to_dict(f))`` rebuilds a front whose
+        selections are bit-identical to the original's — floats survive the
+        trip exactly (JSON uses shortest round-trippable reprs) and order
+        is preserved, so ``select`` walks the same points in the same
+        order."""
+        return {"points": [p.to_dict(encode_plan) for p in self.points]}
+
+    @classmethod
+    def from_dict(cls, d: dict,
+                  decode_plan: Callable[[Any], Any] = lambda p: p
+                  ) -> "ParetoFront":
+        """Rebuild a persisted front.  Trusts the stored order (the writer
+        held the invariants), like the raw constructor."""
+        return cls([ParetoPoint.from_dict(p, decode_plan)
+                    for p in d["points"]])
 
     # ----------------------------------------------------------- invariants
     def dominated(self, latency: float, energy: float) -> bool:

@@ -158,11 +158,14 @@ class EdgeSimulator:
     request; a ``SimRequest.objective`` overrides it per request.
     ``plan_cache`` (a ``repro.serving.plan_cache.PlanCache`` over this
     cluster) replaces per-request strategy calls with cached-frontier
-    selection: the first request per (dag, δ, calibration version) pays the
-    frontier pass, every later one selects in microseconds — each request's
-    arrival-time planning overhead reflects whichever path it took, so
-    planner amortization shows up in simulated completion times exactly as
-    it would in serving.  The cache's *planner config* then owns planning
+    selection — including **mixed-tenant request streams**: every request
+    resolves its own ``SimRequest.dag`` against the one shared cache, so
+    the first request per (dag fingerprint, δ, calibration version) pays
+    the frontier pass and every later one selects in microseconds — each
+    request's arrival-time planning overhead reflects whichever path it
+    took, so planner amortization (and any eviction churn under a bounded
+    cache) shows up in simulated completion times exactly as it would in
+    serving.  The cache's *planner config* then owns planning
     (HiDP, and the provider baked into ``cache.planner.config``), so
     combining it with a baseline ``strategy`` or a simulator-level
     ``provider`` is rejected rather than silently mislabelling results."""

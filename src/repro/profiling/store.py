@@ -8,11 +8,24 @@ fingerprint and cleanly invalidates old calibrations.  Within a fingerprint,
 every ``save`` appends a new monotonically-numbered version; ``load``
 returns the latest by default so re-profiling supersedes without deleting
 history (the per-request plan cache can key on ``(fingerprint, version)``).
+
+The store also files **warm plan frontiers** next to the calibrations they
+were planned under (:meth:`save_fronts` / :meth:`load_fronts`): one
+``fronts.json`` per cluster fingerprint, each entry stamped with the
+``calibration_version`` it is valid for and the ``dag_fingerprint`` of the
+tenant it serves.  ``repro.serving.plan_cache.PlanCache`` persists its warm
+table here so a restarted process serves every tenant without re-running
+the cold frontier pass; entries whose version no longer matches the live
+calibration are dropped on load, so a stale front can never be served.
+The store itself treats entries as opaque JSON — encoding/decoding plan
+payloads is the cache's job (``repro.core.plan_to_dict`` /
+``plan_from_dict``), which keeps profiling free of serving imports.
 """
 
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import time
 
@@ -70,3 +83,45 @@ class CalibrationStore:
         path = self._dir(cluster) / f"v{v:04d}.json"
         payload = json.loads(path.read_text())
         return LearnedCostModel.from_dict(payload["model"])
+
+    # ------------------------------------------------------- plan frontiers
+    def fronts_path(self, cluster: Cluster) -> pathlib.Path:
+        """Where warm plan frontiers live for this cluster — right next to
+        its ``v*.json`` calibrations."""
+        return self._dir(cluster) / "fronts.json"
+
+    def save_fronts(self, cluster: Cluster, entries: list[dict]) -> int:
+        """Persist warm plan frontiers for ``cluster``.
+
+        Each entry is an opaque JSON dict the writer (``PlanCache``) built:
+        at minimum ``dag_fingerprint``, ``dag_name``, ``delta``,
+        ``calibration_version``, and a serialized ``front``.  The write is
+        atomic (temp file + ``os.replace``), mirroring the cache's
+        in-memory generation swap: a concurrent reader sees either the old
+        table or the new one, never a torn file.  Returns the entry count.
+        """
+        d = self._dir(cluster)
+        d.mkdir(parents=True, exist_ok=True)
+        payload = {
+            "fingerprint": self.fingerprint(cluster),
+            "created_unix": time.time(),
+            "entries": list(entries),
+        }
+        path = self.fronts_path(cluster)
+        tmp = path.with_suffix(".json.tmp")
+        tmp.write_text(json.dumps(payload, sort_keys=True))
+        os.replace(tmp, path)
+        return len(entries)
+
+    def load_fronts(self, cluster: Cluster) -> list[dict]:
+        """The persisted frontier entries for ``cluster`` (raw dicts), or
+        ``[]`` when none were ever saved.  Filtering stale
+        ``calibration_version`` entries is the *loader's* contract
+        (``PlanCache.warm_from``) — the store returns what is on disk."""
+        path = self.fronts_path(cluster)
+        if not path.is_file():
+            return []
+        payload = json.loads(path.read_text())
+        if payload.get("fingerprint") != self.fingerprint(cluster):
+            return []
+        return payload.get("entries", [])

@@ -1,11 +1,16 @@
-"""repro.serving — the serving tier: continuous-batching engine + plan cache.
+"""repro.serving — the serving tier: continuous-batching engine + the
+cluster's shared plan cache.
 
 ``ServingEngine`` executes (the paper's Run-time Scheduler FSM, Fig. 4);
-``PlanCache`` keeps planning off the hot path: one frontier pass per
-``(cluster fingerprint, calibration version, dag)``, every request objective
-served by selection until a FeedbackLoop drift event bumps the version.
-See docs/planning.md for the cache lifecycle.
+``PlanCache`` keeps planning off the hot path for **every tenant sharing
+the cluster**: one frontier pass per ``(cluster fingerprint, calibration
+version, dag fingerprint, δ)``, every request objective served by
+selection until a FeedbackLoop drift event bumps the version — then one
+re-plan per tenant.  ``LRUEviction`` bounds the cache (entry/byte
+budgets); ``PlanCache.persist``/``warm_from`` round-trip warm fronts
+through ``CalibrationStore`` so restarts skip the cold pass.  See
+docs/serving.md for the lifecycle.
 """
 
 from .engine import Request, ServingEngine  # noqa: F401
-from .plan_cache import PlanCache  # noqa: F401
+from .plan_cache import CacheEntry, LRUEviction, PlanCache  # noqa: F401

@@ -3,10 +3,15 @@ HiDP plan.
 
 The engine is the TPU rendering of the paper's Run-time Scheduler FSM
 (Fig. 4): ANALYZE admits queued requests into free slots, EXPLORE is the
-HiDP planning pass (done once per (arch × shape × mesh), re-entered on
-elasticity events), OFFLOAD/MAP dispatch the jitted prefill/decode
-executables with plan-derived shardings, EXECUTE streams decode steps and
-merges emitted tokens per request (Alg. 1 line 13).
+HiDP planning pass (amortized by the shared multi-tenant ``PlanCache`` —
+one frontier pass per tenant, re-entered per tenant on drift/elasticity
+events), OFFLOAD/MAP dispatch the jitted prefill/decode executables with
+plan-derived shardings, EXECUTE streams decode steps and merges emitted
+tokens per request (Alg. 1 line 13).
+
+Each ``submit`` may name its tenant (``dag=``, a ModelDAG) and objective;
+the request's plan is resolved from the cache's warm frontier — see
+docs/serving.md for the full multi-tenant lifecycle.
 
 Runs identically on a CPU test mesh (tiny configs) and the production mesh.
 """
@@ -22,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fingerprint import dag_fingerprint
 from repro.core.objective import METRICS
 from repro.core.scheduler import State
 from repro.models.model import Model
@@ -36,6 +42,9 @@ class Request:
     # what this request asks the planner to minimize when (re-)planning:
     # "latency" | "energy" | "edp" (an Objective's metric name)
     objective: str = "latency"
+    # which tenant (ModelDAG) this request belongs to — resolved against
+    # the shared PlanCache; None when the engine serves without a cache
+    dag: Any = None
     # filled during serving
     slot: int | None = None
     generated: list[int] = dataclasses.field(default_factory=list)
@@ -58,18 +67,22 @@ class ServingEngine:
     planning pass (e.g. battery-saver clients requesting ``energy`` flip the
     fleet to energy-optimal plans once they dominate the batch).
 
-    ``plan_cache`` (a ``repro.serving.plan_cache.PlanCache``) + ``plan_dag``
-    (the ModelDAG describing the served workload) put planning on the cached
-    frontier: every ``submit`` resolves its request's objective against the
-    cached front — zero DP work after the first request — and a drift event
-    re-enters EXPLORE with exactly one frontier re-plan, selected at the
-    then-dominant objective.  Wire the same ``feedback`` loop as the cache's
-    ``version_source`` and the bump is atomic with the refit."""
+    ``plan_cache`` (a ``repro.serving.plan_cache.PlanCache``) puts planning
+    on the shared multi-tenant frontier cache: every ``submit`` names its
+    tenant with ``dag=`` (a ModelDAG; ``default_dag`` covers single-tenant
+    deployments) and resolves its objective against that tenant's cached
+    front — zero DP work after each tenant's first request.  A drift event
+    re-enters EXPLORE with exactly **one frontier re-plan per in-flight
+    tenant**, each selected at that tenant's dominant objective
+    (:meth:`dominant_objective`); per-tenant selections land in
+    ``tenant_plans`` keyed by dag fingerprint.  Wire the same ``feedback``
+    loop as the cache's ``version_source`` and the bump is atomic with the
+    refit."""
 
     def __init__(self, model: Model, params: dict, *, max_batch: int = 4,
                  max_len: int = 128, plan=None, donate: bool = True,
                  feedback=None, on_replan: Callable[[], Any] | None = None,
-                 plan_cache=None, plan_dag=None):
+                 plan_cache=None, default_dag=None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -77,13 +90,17 @@ class ServingEngine:
         self.plan = plan
         self.feedback = feedback
         self.on_replan = on_replan
-        if (plan_cache is None) != (plan_dag is None):
+        if plan_cache is None and default_dag is not None:
             raise ValueError(
-                "plan_cache and plan_dag go together: the cache needs the "
-                "served workload's ModelDAG to resolve objectives against "
-                "its frontier — pass both or neither")
+                "default_dag names the tenant submits resolve against a "
+                "plan_cache; without a cache there is nothing to resolve "
+                "— pass plan_cache too")
         self.plan_cache = plan_cache
-        self.plan_dag = plan_dag
+        self.default_dag = default_dag
+        # most recent plan selection per tenant, keyed by dag fingerprint,
+        # and each tenant's compute intensity (part of its cache key)
+        self.tenant_plans: dict[str, Any] = {}
+        self._tenant_deltas: dict[str, float | None] = {}
         self.replans = 0
         self._decode_steps = 0
         self.cache = model.init_cache(max_batch, max_len)
@@ -102,40 +119,85 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ API
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               eos_id: int | None = None,
-               objective: str = "latency") -> int:
+               eos_id: int | None = None, objective: str = "latency",
+               dag=None, delta: float | None = None) -> int:
         """Queue one request.  ``objective`` names the planning metric this
-        request wants (``"latency"`` | ``"energy"`` | ``"edp"``).  With a
-        ``plan_cache`` wired, the objective is resolved against the cached
-        plan frontier right here — a lookup + select, no DP pass."""
+        request wants (``"latency"`` | ``"energy"`` | ``"edp"``); ``dag``
+        names its tenant (falling back to ``default_dag``) and ``delta``
+        the tenant's compute intensity — part of the cache key, so it must
+        match what warmed (or persisted) the tenant's front; None uses the
+        cache planner's default.  With a ``plan_cache`` wired, the
+        objective is resolved against that tenant's cached frontier right
+        here — a lookup + select, no DP pass after the tenant's first
+        request.  ``self.plan`` tracks the most recent resolution;
+        per-tenant selections live in ``tenant_plans``."""
         if objective not in METRICS:
             raise ValueError(f"unknown objective {objective!r}; "
                              f"expected one of {METRICS}")
+        dag = dag if dag is not None else self.default_dag
+        if dag is not None and self.plan_cache is None:
+            raise ValueError(
+                "submit(dag=...) names a tenant to resolve against a "
+                "plan_cache, but the engine has none — wire plan_cache=")
         rid = self._next_id
         self._next_id += 1
-        if self.plan_cache is not None and self.plan_dag is not None:
-            self.plan = self.plan_cache.get(self.plan_dag,
-                                            objective=objective)
+        if self.plan_cache is not None:
+            if dag is None:
+                raise ValueError(
+                    "a plan_cache is wired but this submit names no "
+                    "tenant: pass dag= here or default_dag= to the engine")
+            self.plan = self.plan_cache.get(dag, objective=objective,
+                                            delta=delta)
+            fp = dag_fingerprint(dag)
+            self.tenant_plans[fp] = self.plan
+            self._tenant_deltas[fp] = delta
         self.queue.append(Request(rid, np.asarray(prompt, np.int32),
                                   max_new_tokens, eos_id,
-                                  objective=objective))
+                                  objective=objective, dag=dag))
         return rid
 
     def active(self) -> int:
         return sum(r is not None for r in self.slot_req)
 
-    def dominant_objective(self) -> str:
-        """The most-requested objective among queued + in-flight requests —
-        what an ``on_replan`` callback (and the post-drift cache re-plan)
-        hands the next planning pass.  Tie-breaking is deterministic by the
-        fixed ``METRICS`` order (latency > energy > edp; empty engine →
-        "latency"), so re-plan objectives — and therefore cache behaviour —
-        are reproducible across runs regardless of dict or arrival order."""
-        counts = dict.fromkeys(METRICS, 0)
-        for r in self.queue:
-            counts[r.objective] += 1
+    def _requests(self):
+        """Queued + in-flight requests, queue first."""
+        yield from self.queue
         for r in self.slot_req:
             if r is not None:
+                yield r
+
+    def _tenant_traffic(self) -> dict:
+        """``{dag fingerprint: (dag, request count)}`` over queued +
+        in-flight requests."""
+        by_fp: dict[str, Any] = {}
+        for r in self._requests():
+            if r.dag is not None:
+                fp = dag_fingerprint(r.dag)
+                dag, n = by_fp.get(fp, (r.dag, 0))
+                by_fp[fp] = (dag, n + 1)
+        return by_fp
+
+    def tenant_dags(self) -> list:
+        """The distinct tenants with queued or in-flight traffic, ordered
+        by dag fingerprint so per-tenant re-plans (and therefore cache
+        behaviour) are deterministic regardless of arrival order."""
+        traffic = self._tenant_traffic()
+        return [traffic[fp][0] for fp in sorted(traffic)]
+
+    def dominant_objective(self, dag=None) -> str:
+        """The most-requested objective among queued + in-flight requests —
+        what an ``on_replan`` callback (and the post-drift cache re-plan)
+        hands the next planning pass.  ``dag`` restricts the count to one
+        tenant's traffic (how each tenant's drift re-plan picks its own
+        objective).  Tie-breaking is deterministic by the fixed ``METRICS``
+        order (latency > energy > edp; empty engine → "latency"), so
+        re-plan objectives — and therefore cache behaviour — are
+        reproducible across runs regardless of dict or arrival order."""
+        fp = None if dag is None else dag_fingerprint(dag)
+        counts = dict.fromkeys(METRICS, 0)
+        for r in self._requests():
+            if fp is None or (r.dag is not None
+                              and dag_fingerprint(r.dag) == fp):
                 counts[r.objective] += 1
         return max(METRICS, key=counts.__getitem__)
 
@@ -238,13 +300,27 @@ class ServingEngine:
                 self.state = State.EXPLORE
                 self.trace.append(self.state)
                 self.replans += 1
-                if self.plan_cache is not None and self.plan_dag is not None:
+                if self.plan_cache is not None:
                     # the drift already bumped the calibration version (via
-                    # version_source or this on_drift); re-plan exactly once,
-                    # at the objective the in-flight traffic wants
+                    # version_source or this on_drift); re-plan exactly
+                    # once *per in-flight tenant* — each tenant's first
+                    # post-bump lookup is its single frontier pass — at
+                    # the objective that tenant's traffic wants and the
+                    # delta its front was keyed under
                     self.plan_cache.on_drift()
-                    self.plan = self.plan_cache.get(
-                        self.plan_dag, objective=self.dominant_objective())
+                    traffic = self._tenant_traffic()
+                    for fp in sorted(traffic):
+                        dag = traffic[fp][0]
+                        self.tenant_plans[fp] = self.plan_cache.get(
+                            dag, objective=self.dominant_objective(dag),
+                            delta=self._tenant_deltas.get(fp))
+                    if traffic:
+                        # engine-level plan: the busiest tenant's selection
+                        # (ties break low-fingerprint-first), never an
+                        # arbitrary last writer
+                        busiest = max(sorted(traffic),
+                                      key=lambda f: traffic[f][1])
+                        self.plan = self.tenant_plans[busiest]
                 if self.on_replan is not None:
                     self.on_replan()
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))

@@ -1,12 +1,13 @@
-"""PlanCache — versioned plan frontiers on the serving hot path.
+"""PlanCache — one persistent, evicting plan-frontier cache per cluster.
 
-The paper pays its ~15 ms two-tier DP on *every* request; CoEdge
-(arXiv:2012.03257) amortizes partition decisions across requests and DEFER
-(arXiv:2201.06769) computes them once ahead of serving.  This cache gets
-both: one (objective-independent) frontier pass per
-``(cluster fingerprint, calibration version, dag name, δ)``, then any
-request's objective is resolved against the cached
-:class:`~repro.core.pareto.ParetoFront` with zero DP work — a dict lookup
+HiDP's premise is a *shared* heterogeneous edge cluster serving many
+concurrent DNN workloads (the paper's Fig. 7 request mixes; CoEdge,
+arXiv:2012.03257, frames the same multi-workload scenario).  The paper pays
+its ~15 ms two-tier DP on every request; this cache amortizes it across
+requests *and tenants*: one (objective-independent) frontier pass per
+``(cluster fingerprint, calibration version, dag fingerprint, δ)``, then
+any request's objective — from any tenant — is resolved against the cached
+:class:`~repro.core.pareto.ParetoFront` with zero DP work: a dict lookup
 plus an O(front-width) ``select``.
 
 Keys and invalidation:
@@ -16,6 +17,11 @@ Keys and invalidation:
   files calibrations in ``CalibrationStore``, so plan-cache keys and
   calibration paths can never drift apart.  A board swap or link upgrade
   changes the fingerprint and cleanly orphans every cached front.
+* the **dag fingerprint** (:func:`repro.core.fingerprint.dag_fingerprint`)
+  identifies the tenant by its full cost surface, not its name — two
+  workloads that share a model name but differ in shape can never collide,
+  and editing a model's blocks orphans its fronts like a board swap
+  orphans calibrations.
 * the **calibration version** either lives in the cache
   (:meth:`bump_version`) or is read live from a ``version_source`` — any
   object with a ``calibration_version`` attribute, e.g. a
@@ -24,9 +30,32 @@ Keys and invalidation:
   a single reference assignment, so a concurrent reader sees either the
   old generation (stale front, still internally consistent) or the new
   empty one — never a half-invalidated mix.
-* after a bump, the next lookup per dag misses exactly once and pays one
-  EXPLORE re-plan (the frontier pass); every other objective variation for
-  that dag is a hit again.
+* after a bump, the next lookup *per tenant* misses exactly once and pays
+  one EXPLORE re-plan (the frontier pass); every other objective variation
+  for that tenant is a hit again.
+
+Eviction (multi-tenant caches are bounded):
+
+* ``eviction=LRUEviction(max_entries=..., max_bytes=...)`` caps the table;
+  the least-recently-used tenant entry is dropped first when either budget
+  overflows.  The entry the current request just touched (the in-flight
+  tenant) is never evicted, even if it alone exceeds the byte budget — a
+  request can always be served from the front it just built.
+* an evicted tenant is not an error: its next request re-plans (a miss)
+  and re-enters the table.  ``evictions`` counts drops.
+
+Persistence (warm restarts):
+
+* :meth:`persist` writes the current generation's fronts next to the
+  calibrations in a ``repro.profiling.CalibrationStore`` (JSON round-trip
+  via ``repro.core.plan_to_dict``); :meth:`warm_from` — or passing
+  ``store=`` at construction — loads them back, **dropping any entry
+  whose calibration version does not match the live one or whose
+  on-disk calibration anchor moved** (a re-profiling between persist and
+  restart invalidates even when in-memory counters collide), so a stale
+  front can never serve.  A restarted process then serves every tenant's
+  first request with zero DP work, and selections off loaded fronts are
+  bit-identical to the freshly built ones (floats survive JSON exactly).
 
 ``get`` stamps the returned plan's ``planning_seconds`` with what the
 caller actually waited — the full frontier pass on a miss, the lookup
@@ -37,18 +66,88 @@ honestly.
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
+from collections import OrderedDict
 
 from repro.core.cost_model import Cluster
 from repro.core.dag import ModelDAG
-from repro.core.fingerprint import cluster_fingerprint
-from repro.core.hidp import HiDPPlan, HiDPPlanner
+from repro.core.fingerprint import cluster_fingerprint, dag_fingerprint
+from repro.core.hidp import (HiDPPlan, HiDPPlanner, plan_from_dict,
+                             plan_to_dict)
 from repro.core.objective import Objective
 from repro.core.pareto import ParetoFront
 
 
+@dataclasses.dataclass
+class CacheEntry:
+    """One tenant's cached frontier, plus what persistence needs to file it
+    (``nbytes`` is the JSON-serialized size — the byte-budget currency,
+    computed lazily so misses pay for serialization only when a byte
+    budget, a persist, or a stats call actually needs it)."""
+
+    dag_name: str
+    dag_fingerprint: str
+    delta: float
+    front: ParetoFront
+    _nbytes: int | None = None
+
+    @property
+    def nbytes(self) -> int:
+        if self._nbytes is None:
+            self._nbytes = len(json.dumps(self.front.to_dict(plan_to_dict)))
+        return self._nbytes
+
+
+class LRUEviction:
+    """Bounded LRU over tenant entries.
+
+    Attributes:
+        max_entries: entry-count budget (None = unbounded).
+        max_bytes: serialized-front byte budget (None = unbounded).
+
+    ``victims`` returns the least-recently-used keys to drop so the table
+    fits both budgets, never including ``protect`` — the in-flight tenant's
+    entry survives even when it alone exceeds ``max_bytes``.
+    """
+
+    def __init__(self, max_entries: int | None = None,
+                 max_bytes: int | None = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError("max_entries must be >= 1 (the in-flight "
+                             "tenant's entry is never evicted)")
+        if max_bytes is not None and max_bytes <= 0:
+            raise ValueError("max_bytes must be positive")
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
+
+    def victims(self, entries: "OrderedDict[tuple, CacheEntry]",
+                protect: tuple | None = None) -> list[tuple]:
+        drop: list[tuple] = []
+        n = len(entries)
+        # entry sizes are only materialized when a byte budget exists
+        nbytes = (sum(e.nbytes for e in entries.values())
+                  if self.max_bytes is not None else 0)
+        for key, entry in entries.items():          # LRU first
+            over = ((self.max_entries is not None and n > self.max_entries)
+                    or (self.max_bytes is not None and nbytes > self.max_bytes))
+            if not over:
+                break
+            if key == protect:
+                continue
+            drop.append(key)
+            n -= 1
+            if self.max_bytes is not None:
+                nbytes -= entry.nbytes
+        return drop
+
+    def __repr__(self) -> str:
+        return (f"LRUEviction(max_entries={self.max_entries}, "
+                f"max_bytes={self.max_bytes})")
+
+
 class PlanCache:
-    """Cached plan frontiers for one cluster, served by one planner.
+    """Cached plan frontiers for one cluster, served to many tenants.
 
     Attributes:
         planner: the :class:`~repro.core.hidp.HiDPPlanner` that computes
@@ -56,24 +155,35 @@ class PlanCache:
             and the default δ).
         fingerprint: the cluster's topology hash (shared with
             ``CalibrationStore``).
-        hits / misses / invalidations: lifetime counters; ``misses`` counts
-            EXPLORE re-plans (full frontier passes).
+        eviction: the bounded-budget policy (:class:`LRUEviction`), or
+            None for an unbounded table.
+        hits / misses / evictions / invalidations / loaded: lifetime
+            counters; ``misses`` counts EXPLORE re-plans (full frontier
+            passes), ``loaded`` counts fronts served warm from a store.
     """
 
     def __init__(self, planner: HiDPPlanner, cluster: Cluster, *,
-                 version: int = 0, version_source=None):
+                 version: int = 0, version_source=None,
+                 eviction: LRUEviction | None = None, store=None):
         self.planner = planner
         self.cluster = cluster
         self.fingerprint = cluster_fingerprint(cluster)
+        self.eviction = eviction
+        self._store = store
         self._version_source = version_source
         if version_source is not None:
             version = version_source.calibration_version
-        # one atomically-swapped generation: (version, {key: front})
-        self._generation: tuple[int, dict[tuple, ParetoFront]] = \
-            (int(version), {})
+        # one atomically-swapped generation: (version, {key: CacheEntry}),
+        # the table ordered least- to most-recently used
+        self._generation: tuple[int, "OrderedDict[tuple, CacheEntry]"] = \
+            (int(version), OrderedDict())
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         self.invalidations = 0
+        self.loaded = 0
+        if store is not None:
+            self.warm_from(store)
 
     # -------------------------------------------------------------- keying
     @property
@@ -85,37 +195,49 @@ class PlanCache:
             return int(self._version_source.calibration_version)
         return self._generation[0]
 
-    def key(self, dag_name: str, delta: float | None = None) -> tuple:
-        """``(cluster fingerprint, calibration version, dag name, δ)``."""
+    def key(self, dag: ModelDAG, delta: float | None = None) -> tuple:
+        """``(cluster fp, calibration version, dag fingerprint, δ)``."""
         if delta is None:
             delta = self.planner.config.delta
-        return (self.fingerprint, self.version, dag_name, delta)
+        return (self.fingerprint, self.version, dag_fingerprint(dag), delta)
 
     # ------------------------------------------------------------- lookups
-    def front(self, dag: ModelDAG, delta: float | None = None) -> ParetoFront:
-        """The cached frontier for ``dag`` — one DP pass per generation."""
-        key = self.key(dag.name, delta)
-        version, fronts = self._generation
-        if version != key[1]:
-            # version_source moved on: start a fresh generation atomically
-            version, fronts = key[1], {}
-            self._generation = (version, fronts)
+    def _table(self, version: int) -> "OrderedDict[tuple, CacheEntry]":
+        """The current generation's table, swapping in a fresh one
+        atomically when ``version_source`` moved on."""
+        gen_version, entries = self._generation
+        if gen_version != version:
+            entries = OrderedDict()
+            self._generation = (version, entries)
             self.invalidations += 1
-        front = fronts.get(key)
-        if front is None:
-            self.misses += 1
-            planner = (self.planner if delta is None
-                       else self.planner.at_delta(delta))
-            front = planner.front(dag, self.cluster)
-            fronts[key] = front
-        else:
+        return entries
+
+    def front(self, dag: ModelDAG, delta: float | None = None) -> ParetoFront:
+        """The cached frontier for ``dag`` — one DP pass per tenant per
+        generation.  A hit refreshes the tenant's LRU position; a miss
+        plans, inserts, and then lets the eviction policy trim *other*
+        tenants back under budget."""
+        key = self.key(dag, delta)
+        entries = self._table(key[1])
+        entry = entries.get(key)
+        if entry is not None:
             self.hits += 1
+            entries.move_to_end(key)
+            return entry.front
+        self.misses += 1
+        if delta is None:
+            delta = self.planner.config.delta
+        front = self.planner.at_delta(delta).front(dag, self.cluster)
+        entries[key] = CacheEntry(dag_name=dag.name,
+                                  dag_fingerprint=key[2], delta=delta,
+                                  front=front)
+        self._evict(entries, protect=key)
         return front
 
     def get(self, dag: ModelDAG, objective: Objective | str | None = None,
             delta: float | None = None) -> HiDPPlan:
-        """Resolve one request: select ``objective`` over the cached front.
-        Zero DP work on a hit.  ``objective`` may be an
+        """Resolve one request: select ``objective`` over the tenant's
+        cached front.  Zero DP work on a hit.  ``objective`` may be an
         :class:`~repro.core.objective.Objective` or a metric name
         (``"latency"`` | ``"energy"`` | ``"edp"``)."""
         if isinstance(objective, str):
@@ -129,30 +251,123 @@ class PlanCache:
         return dataclasses.replace(
             plan, planning_seconds=time.perf_counter() - t0)
 
+    # ------------------------------------------------------------ eviction
+    def _evict(self, entries: "OrderedDict[tuple, CacheEntry]",
+               protect: tuple | None = None) -> None:
+        if self.eviction is None:
+            return
+        for key in self.eviction.victims(entries, protect):
+            del entries[key]
+            self.evictions += 1
+
     # -------------------------------------------------------- invalidation
     def bump_version(self, version: int | None = None) -> int:
         """Atomically invalidate every cached front: the (version, table)
-        pair swaps in one assignment.  No-op counter-wise when a
-        ``version_source`` drives the version (it already moved)."""
+        pair swaps in one assignment.  Raises when a ``version_source``
+        drives the version (bump it there — FeedbackLoop drift events do
+        this automatically)."""
         if self._version_source is not None:
             raise RuntimeError(
                 "version is driven by version_source; bump it there "
                 "(FeedbackLoop drift events do this automatically)")
         new = self._generation[0] + 1 if version is None else int(version)
-        self._generation = (new, {})
+        self._generation = (new, OrderedDict())
         self.invalidations += 1
         return new
 
     def on_drift(self) -> None:
         """Hook for ``FeedbackLoop(on_drift=cache.on_drift)`` when no
         version_source is wired: one drift event → one atomic bump → the
-        next lookup per dag is the single EXPLORE re-plan."""
+        next lookup *per tenant* is that tenant's single EXPLORE re-plan."""
         if self._version_source is None:
             self.bump_version()
+
+    # --------------------------------------------------------- persistence
+    def _store_version(self, store) -> int:
+        """The latest *on-disk* calibration version for this cluster — the
+        durable stale-front anchor.  The in-memory counter resets with the
+        process, but the store's ``v*.json`` history does not: a front
+        persisted before a re-profiling (a new calibration file) can never
+        be served after it, whatever the counters say."""
+        versions = store.versions(self.cluster)
+        return versions[-1] if versions else 0
+
+    def persist(self, store=None) -> int:
+        """Write the current generation's warm fronts next to the
+        calibrations in ``store`` (a ``repro.profiling.CalibrationStore``;
+        defaults to the one wired at construction).  Each entry is stamped
+        with the generation's calibration version *and* the store's
+        latest on-disk calibration version, so a loader under a newer
+        calibration — counter bump or re-profiled store — drops it rather
+        than serving a stale front.  Returns the number of fronts
+        written."""
+        store = self._store if store is None else store
+        if store is None:
+            raise ValueError("no CalibrationStore to persist to: pass one "
+                             "here or wire store= at construction")
+        version, entries = self._generation
+        store_version = self._store_version(store)
+        payload = [
+            {"dag_fingerprint": e.dag_fingerprint, "dag_name": e.dag_name,
+             "delta": e.delta, "calibration_version": version,
+             "store_calibration_version": store_version,
+             "front": e.front.to_dict(plan_to_dict)}
+            for e in entries.values()
+        ]
+        return store.save_fronts(self.cluster, payload)
+
+    def warm_from(self, store=None) -> int:
+        """Load persisted fronts into the current generation, skipping the
+        cold frontier pass for every tenant they cover.  Stale entries are
+        dropped, never served: an entry loads only if **both** its
+        ``calibration_version`` matches the live version (restarting
+        serving should seed its ``FeedbackLoop(calibration_version=...)``
+        — and therefore this cache — with the same counter it persisted
+        at) *and* its ``store_calibration_version`` matches the store's
+        latest on-disk calibration, so a re-profiling between persist and
+        restart invalidates even when the in-memory counters happen to
+        collide.  A mismatch is conservative — the tenant re-plans cold —
+        never wrong.  The eviction budget is enforced after loading.
+        Returns the number of fronts loaded."""
+        store = self._store if store is None else store
+        if store is None:
+            raise ValueError("no CalibrationStore to warm from: pass one "
+                             "here or wire store= at construction")
+        version = self.version
+        store_version = self._store_version(store)
+        entries = self._table(version)
+        n = 0
+        for raw in store.load_fronts(self.cluster):
+            if (raw.get("calibration_version") != version
+                    or raw.get("store_calibration_version")
+                    != store_version):
+                continue                      # stale: never serve it
+            front = ParetoFront.from_dict(
+                raw["front"], lambda d: plan_from_dict(d, self.cluster))
+            key = (self.fingerprint, version, raw["dag_fingerprint"],
+                   raw["delta"])
+            entries[key] = CacheEntry(
+                dag_name=raw["dag_name"],
+                dag_fingerprint=raw["dag_fingerprint"], delta=raw["delta"],
+                front=front,
+                _nbytes=len(json.dumps(raw["front"])))
+            n += 1
+        self._evict(entries)
+        self.loaded += n
+        return n
 
     # --------------------------------------------------------------- stats
     def __len__(self) -> int:
         return len(self._generation[1])
+
+    def nbytes(self) -> int:
+        """Serialized size of every cached front — what ``max_bytes``
+        budgets."""
+        return sum(e.nbytes for e in self._generation[1].values())
+
+    def tenants(self) -> tuple[str, ...]:
+        """Dag names currently cached, least- to most-recently used."""
+        return tuple(e.dag_name for e in self._generation[1].values())
 
     def hit_rate(self) -> float:
         total = self.hits + self.misses
@@ -160,7 +375,9 @@ class PlanCache:
 
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "invalidations": self.invalidations,
-                "entries": len(self), "version": self.version,
+                "evictions": self.evictions,
+                "invalidations": self.invalidations, "loaded": self.loaded,
+                "entries": len(self), "nbytes": self.nbytes(),
+                "tenants": self.tenants(), "version": self.version,
                 "fingerprint": self.fingerprint,
                 "hit_rate": self.hit_rate()}

@@ -1,0 +1,251 @@
+"""Multi-tenant PlanCache: bounded eviction, persistence, stale-version
+hygiene.
+
+The serving-layer guarantees, as tests (docs/serving.md):
+
+* eviction never exceeds its entry/byte budget and never evicts the
+  in-flight tenant — a request can always be served from the front it
+  just built;
+* persisted fronts round-trip bit-identically: selection on a loaded
+  front equals selection on the freshly built one, for every objective;
+* a fresh cache warmed from ``CalibrationStore`` serves every persisted
+  tenant's first request with zero DP work (the restart-warm gate
+  ``benchmarks/tab1_planner_overhead.py`` also enforces);
+* entries persisted under an older calibration version are dropped on
+  load — a stale front can never serve.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (Block, HiDPPlanner, ModelDAG, Objective,
+                        PlannerConfig, dag_fingerprint, simulate)
+from repro.core.edge_models import EDGE_MODELS, MODEL_DELTA, battery_cluster
+from repro.core.objective import METRICS
+from repro.profiling import CalibrationStore
+from repro.serving import LRUEviction, PlanCache
+
+
+def toy_dag(name: str, n: int = 5, flops: float = 2e9) -> ModelDAG:
+    blocks = tuple(Block(name=f"{name}{i}", flops=flops, param_bytes=1e6,
+                         bytes_in=4e5, bytes_out=4e5, kind="conv")
+                   for i in range(n))
+    return ModelDAG(name=name, blocks=blocks, input_bytes=4e5,
+                    output_bytes=4e5)
+
+
+@pytest.fixture()
+def cluster():
+    return battery_cluster()
+
+
+def make_cache(cluster, **kwargs) -> PlanCache:
+    planner = HiDPPlanner(PlannerConfig(
+        objective=Objective("energy", radio_power=4.0)))
+    return PlanCache(planner, cluster, **kwargs)
+
+
+# --------------------------------------------------------------------------
+# eviction
+# --------------------------------------------------------------------------
+
+def test_entry_budget_never_exceeded_lru_order(cluster):
+    cache = make_cache(cluster, eviction=LRUEviction(max_entries=2))
+    a, b, c = toy_dag("a"), toy_dag("b", 6), toy_dag("c", 7)
+    cache.front(a)
+    cache.front(b)
+    assert len(cache) == 2 and cache.evictions == 0
+    cache.front(a)                       # refresh a's LRU position
+    cache.front(c)                       # over budget: b is LRU → evicted
+    assert len(cache) == 2
+    assert cache.evictions == 1
+    assert cache.tenants() == ("a", "c")
+    # the evicted tenant is not an error — it re-plans and re-enters
+    misses = cache.misses
+    cache.front(b)
+    assert cache.misses == misses + 1 and cache.tenants() == ("c", "b")
+
+
+def test_byte_budget_never_evicts_in_flight_tenant(cluster):
+    # a byte budget smaller than any single front: every insert overflows,
+    # but the entry the current request just built must survive
+    cache = make_cache(cluster, eviction=LRUEviction(max_bytes=1))
+    a, b = toy_dag("a"), toy_dag("b", 6)
+    cache.front(a)
+    assert cache.tenants() == ("a",) and cache.nbytes() > 1
+    cache.front(b)                       # a evicted, b (in-flight) kept
+    assert cache.tenants() == ("b",)
+    assert cache.evictions == 1
+    # and b's request is served from the surviving front: a hit
+    hits = cache.hits
+    cache.get(b, "edp")
+    assert cache.hits == hits + 1
+
+
+def test_byte_budget_bounds_table(cluster):
+    unbounded = make_cache(cluster)
+    dags = [toy_dag(n, 5 + i) for i, n in enumerate("abcd")]
+    for d in dags:
+        unbounded.front(d)
+    per_entry = unbounded.nbytes() // len(dags)
+    budget = int(per_entry * 2.5)        # fits 2, not 3
+    cache = make_cache(cluster, eviction=LRUEviction(max_bytes=budget))
+    for d in dags:
+        cache.front(d)
+        assert cache.nbytes() <= budget
+    assert len(cache) == 2 and cache.evictions == 2
+
+
+def test_eviction_policy_validates():
+    with pytest.raises(ValueError):
+        LRUEviction(max_entries=0)
+    with pytest.raises(ValueError):
+        LRUEviction(max_bytes=0)
+
+
+# --------------------------------------------------------------------------
+# persistence: restart-warm serving
+# --------------------------------------------------------------------------
+
+def test_persisted_front_roundtrip_is_bit_identical(cluster, tmp_path):
+    store = CalibrationStore(tmp_path)
+    cache = make_cache(cluster)
+    tenants = [("efficientnet_b0", EDGE_MODELS["efficientnet_b0"]()),
+               ("vgg19", EDGE_MODELS["vgg19"]())]
+    built = {}
+    for name, dag in tenants:
+        delta = MODEL_DELTA[name]
+        for metric in METRICS:
+            built[(name, metric)] = cache.get(dag, metric, delta=delta)
+    assert cache.persist(store) == len(tenants)
+    assert store.fronts_path(cluster).is_file()      # next to calibrations
+
+    fresh = make_cache(cluster, store=store)         # "the restart"
+    assert fresh.loaded == len(tenants)
+    for name, dag in tenants:
+        delta = MODEL_DELTA[name]
+        for metric in METRICS:
+            warm = fresh.get(dag, metric, delta=delta)
+            want = built[(name, metric)]
+            # selection off the loaded front == selection off the built
+            # front, bit for bit
+            assert warm.predicted_latency == want.predicted_latency
+            assert warm.predicted_energy == want.predicted_energy
+            assert warm.global_plan.partition == want.global_plan.partition
+            assert warm.global_plan.assignments == \
+                want.global_plan.assignments
+            assert warm.local_plans == want.local_plans
+    # every tenant's every request was served with zero DP work
+    assert fresh.misses == 0
+    assert fresh.hits == len(tenants) * len(METRICS)
+
+
+def test_restart_warm_serves_simulated_stream_with_zero_dp(cluster,
+                                                           tmp_path):
+    store = CalibrationStore(tmp_path)
+    cache = make_cache(cluster)
+    dag = EDGE_MODELS["efficientnet_b0"]()
+    delta = MODEL_DELTA["efficientnet_b0"]
+    cache.front(dag, delta)
+    cache.persist(store)
+    fresh = make_cache(cluster, store=store)
+    rep = simulate(cluster, "hidp", [(0.1 * i, dag, delta)
+                                     for i in range(4)], plan_cache=fresh)
+    assert len(rep.records) == 4
+    assert fresh.misses == 0 and fresh.hits == 4
+    # warm lookups report lookup time, not DP time
+    assert all(r.completion - r.arrival < 60 for r in rep.records)
+
+
+def test_stale_version_entries_dropped_on_load(cluster, tmp_path):
+    store = CalibrationStore(tmp_path)
+    cache = make_cache(cluster)
+    dag = toy_dag("a")
+    cache.front(dag)
+    cache.persist(store)                  # persisted at version 0
+    # the calibration moved on before the restart: version 1 ≠ 0
+    stale = make_cache(cluster, version=1, store=store)
+    assert stale.loaded == 0 and len(stale) == 0
+    misses = stale.misses
+    stale.front(dag)                      # must re-plan, never serve stale
+    assert stale.misses == misses + 1
+
+
+def test_reprofiled_store_invalidates_persisted_fronts(cluster, tmp_path):
+    """The durable stale anchor: a new *on-disk* calibration between
+    persist and restart drops the persisted fronts even though the
+    in-memory version counters collide (both processes start at 0)."""
+    from repro.profiling import LearnedCostModel
+
+    store = CalibrationStore(tmp_path)
+    cache = make_cache(cluster)
+    dag = toy_dag("a")
+    cache.front(dag)
+    cache.persist(store)                  # counter 0, no calibration yet
+    store.save(cluster, LearnedCostModel())   # the fleet re-profiles
+    restarted = make_cache(cluster, store=store)  # counter 0 again
+    assert restarted.loaded == 0, \
+        "front persisted before a re-profiling must never serve after it"
+    misses = restarted.misses
+    restarted.front(dag)
+    assert restarted.misses == misses + 1
+
+
+def test_persist_requires_matching_generation_version(cluster, tmp_path):
+    """Fronts persisted right before a bump carry the old version and are
+    dropped by a loader living at the new one."""
+    store = CalibrationStore(tmp_path)
+    cache = make_cache(cluster)
+    cache.front(toy_dag("a"))
+    cache.persist(store)
+    cache.bump_version()                  # drift after persisting
+    reloaded = make_cache(cluster, version=cache.version, store=store)
+    assert reloaded.loaded == 0
+
+
+def test_warm_from_respects_eviction_budget(cluster, tmp_path):
+    store = CalibrationStore(tmp_path)
+    cache = make_cache(cluster)
+    for i, n in enumerate("abc"):
+        cache.front(toy_dag(n, 5 + i))
+    assert cache.persist(store) == 3
+    bounded = make_cache(cluster, store=store,
+                         eviction=LRUEviction(max_entries=2))
+    assert len(bounded) == 2
+    assert bounded.evictions == 1
+
+
+def test_persist_without_store_raises(cluster):
+    cache = make_cache(cluster)
+    with pytest.raises(ValueError):
+        cache.persist()
+    with pytest.raises(ValueError):
+        cache.warm_from()
+
+
+# --------------------------------------------------------------------------
+# mixed-tenant streams through one shared cache
+# --------------------------------------------------------------------------
+
+def test_shared_cache_serves_mixed_tenant_stream(cluster):
+    cache = make_cache(cluster)
+    names = [n for n in list(EDGE_MODELS)[:2]]
+    wl = [(0.05 * i, EDGE_MODELS[names[i % 2]](),
+           MODEL_DELTA[names[i % 2]]) for i in range(8)]
+    rep = simulate(cluster, "hidp", wl, plan_cache=cache)
+    assert len(rep.records) == 8
+    # one frontier pass per tenant, everything else a hit
+    assert cache.misses == 2 and cache.hits == 6
+    assert sorted(cache.tenants()) == sorted(names)
+
+
+def test_dag_fingerprint_distinguishes_same_named_tenants(cluster):
+    cache = make_cache(cluster)
+    a = toy_dag("same", 5)
+    b = dataclasses.replace(toy_dag("same", 5),
+                            blocks=toy_dag("same", 5).blocks[:-1])
+    assert dag_fingerprint(a) != dag_fingerprint(b)
+    cache.front(a)
+    cache.front(b)
+    assert cache.misses == 2 and len(cache) == 2

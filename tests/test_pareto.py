@@ -274,15 +274,24 @@ def test_cache_serves_mixed_objectives_with_one_dp_pass(warm_cache):
 
 
 def test_cache_key_shape_and_shared_fingerprint(warm_cache):
+    from repro.core import dag_fingerprint
+
     cache, cluster = warm_cache
-    key = cache.key("resnet152", 70.0)
+    dag = EDGE_MODELS["resnet152"]()
+    key = cache.key(dag, 70.0)
     assert key == (cluster_fingerprint(cluster), cache.version,
-                   "resnet152", 70.0)
+                   dag_fingerprint(dag), 70.0)
     # the satellite guarantee: PlanCache keys and CalibrationStore paths
     # hash the cluster through the same helper
     assert cache.fingerprint == CalibrationStore.fingerprint(cluster)
     smaller = battery_cluster(n_nodes=3)
     assert cluster_fingerprint(smaller) != cache.fingerprint
+    # tenant identity is the dag's full cost surface, not its name: a
+    # same-named workload with different blocks keys differently
+    import dataclasses as _dc
+    reshaped = _dc.replace(dag, blocks=dag.blocks[:-1])
+    assert dag_fingerprint(reshaped) != dag_fingerprint(dag)
+    assert cache.key(reshaped, 70.0) != key
 
 
 def test_cache_invalidation_on_version_bump_is_atomic(warm_cache):
@@ -291,14 +300,14 @@ def test_cache_invalidation_on_version_bump_is_atomic(warm_cache):
     delta = MODEL_DELTA["efficientnet_b0"]
     first = cache.get(dag, "energy", delta=delta)
     old_gen = cache._generation
-    old_key = cache.key(dag.name, delta)
+    old_key = cache.key(dag, delta)
     v = cache.bump_version()
     # the swap is a single reference assignment: the old generation object
     # is untouched (a concurrent reader keeps a consistent view) and the
     # new one is empty at the new version
     assert old_gen[0] == v - 1 and old_key in old_gen[1]
     assert cache._generation[0] == v and not cache._generation[1]
-    assert cache.key(dag.name, delta) != old_key
+    assert cache.key(dag, delta) != old_key
     # exactly one EXPLORE re-plan repopulates, then hits resume
     misses0 = cache.misses
     again = cache.get(dag, "energy", delta=delta)

@@ -148,7 +148,7 @@ def test_engine_submit_resolves_objectives_from_plan_cache(small_lm):
     cfg, model, params = small_lm
     cache, dag = _toy_cache()
     eng = ServingEngine(model, params, max_batch=2, max_len=32,
-                        plan_cache=cache, plan_dag=dag)
+                        plan_cache=cache, default_dag=dag)
     from repro.core import Objective
 
     objectives = ("latency", "energy", "edp", "energy")
@@ -178,7 +178,7 @@ def test_engine_drift_triggers_exactly_one_cache_replan(small_lm):
                       [(1.0, 0.0, 1e-9), (2.0, 0.0, 2e-9)])
     fb = FeedbackLoop(beliefs, threshold=0.75)
     eng = ServingEngine(model, params, max_batch=1, max_len=64,
-                        feedback=fb, plan_cache=cache, plan_dag=dag)
+                        feedback=fb, plan_cache=cache, default_dag=dag)
     rid = eng.submit(np.asarray([5, 9, 2], np.int32), max_new_tokens=40,
                      objective="energy")
     done = eng.run_until_done()
@@ -188,6 +188,78 @@ def test_engine_drift_triggers_exactly_one_cache_replan(small_lm):
     assert cache.misses == 1 + eng.replans
     assert cache.invalidations == eng.replans
     assert cache.version == eng.replans
+
+
+def test_engine_drift_replans_each_tenant_exactly_once(small_lm):
+    """Two tenants share one cache; a drift event re-enters EXPLORE with
+    exactly one frontier re-plan *per in-flight tenant*, each at that
+    tenant's own dominant objective."""
+    import dataclasses
+
+    from repro.core import dag_fingerprint
+    from repro.core.scheduler import State
+    from repro.profiling import FeedbackLoop, LearnedCostModel
+
+    cfg, model, params = small_lm
+    cache, dag_a = _toy_cache()
+    dag_b = dataclasses.replace(dag_a, name="toy_b",
+                                blocks=dag_a.blocks[:-1])
+    beliefs = LearnedCostModel()
+    beliefs.fit_entry("engine/decode", "decode",
+                      [(1.0, 0.0, 1e-9), (2.0, 0.0, 2e-9)])
+    fb = FeedbackLoop(beliefs, threshold=0.75)
+    eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                        feedback=fb, plan_cache=cache)
+    ra = eng.submit(np.asarray([5, 9, 2], np.int32), max_new_tokens=40,
+                    objective="energy", dag=dag_a)
+    rb = eng.submit(np.asarray([1, 4], np.int32), max_new_tokens=40,
+                    objective="latency", dag=dag_b)
+    done = eng.run_until_done()
+    assert done[ra].done and done[rb].done
+    assert eng.replans >= 1 and State.EXPLORE in eng.trace
+    # one miss per tenant to warm the cache + one re-plan per tenant per
+    # drift event — never more
+    assert cache.misses == 2 + 2 * eng.replans
+    assert cache.invalidations == eng.replans
+    # each tenant's latest selection is tracked separately
+    assert set(eng.tenant_plans) == {dag_fingerprint(dag_a),
+                                     dag_fingerprint(dag_b)}
+    assert eng.tenant_plans[dag_fingerprint(dag_a)].dag_name == "toy"
+    assert eng.tenant_plans[dag_fingerprint(dag_b)].dag_name == "toy_b"
+
+
+def test_engine_submit_requires_tenant_when_cache_wired(small_lm):
+    """A plan_cache without a tenant (no dag= and no default_dag) cannot
+    resolve a plan; naming a dag without a cache is equally a wiring
+    error."""
+    cfg, model, params = small_lm
+    cache, dag = _toy_cache()
+    eng = ServingEngine(model, params, max_batch=1, max_len=32,
+                        plan_cache=cache)
+    with pytest.raises(ValueError, match="tenant"):
+        eng.submit(np.asarray([1], np.int32), max_new_tokens=2)
+    eng.submit(np.asarray([1], np.int32), max_new_tokens=2, dag=dag)
+    assert cache.misses == 1
+    plain = ServingEngine(model, params, max_batch=1, max_len=32)
+    with pytest.raises(ValueError, match="plan_cache"):
+        plain.submit(np.asarray([1], np.int32), max_new_tokens=2, dag=dag)
+    with pytest.raises(ValueError, match="plan_cache"):
+        ServingEngine(model, params, default_dag=dag)
+
+
+def test_engine_submit_delta_is_part_of_the_cache_key(small_lm):
+    """δ rides the cache key: a submit at the delta that warmed the front
+    hits; a different delta is a different tenant entry (one more pass)."""
+    cfg, model, params = small_lm
+    cache, dag = _toy_cache()
+    cache.front(dag, 70.0)                         # warmed at δ=70
+    eng = ServingEngine(model, params, max_batch=2, max_len=32,
+                        plan_cache=cache, default_dag=dag)
+    eng.submit(np.asarray([1, 2], np.int32), max_new_tokens=2, delta=70.0)
+    assert (cache.misses, cache.hits) == (1, 1)    # warm front reused
+    eng.submit(np.asarray([3], np.int32), max_new_tokens=2, delta=55.0)
+    assert cache.misses == 2                       # new δ → new key
+    eng.run_until_done()
 
 
 def test_engine_per_request_objective(small_lm):
