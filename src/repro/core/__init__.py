@@ -15,7 +15,8 @@ from .cost_model import (ANALYTIC, AnalyticCostProvider,  # noqa: F401
 from .dag import Block, DataPartition, ModelDAG, ModelPartition, chain  # noqa: F401
 from .objective import LATENCY, Objective, resolve_objective  # noqa: F401
 from .pareto import ParetoFront, ParetoPoint  # noqa: F401
-from .fingerprint import cluster_fingerprint, dag_fingerprint  # noqa: F401
+from .fingerprint import (cluster_fingerprint, dag_fingerprint,  # noqa: F401
+                          membership_fingerprint)
 from .dp_partitioner import (partition, partition_data,  # noqa: F401
                              partition_data_front, partition_front,
                              partition_model, partition_model_front,

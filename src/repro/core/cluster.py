@@ -45,6 +45,49 @@ class ClusterManager:
     def nodes(self) -> tuple[Node, ...]:
         return self.cluster.nodes
 
+    def node(self, name: str) -> Node:
+        for n in self.cluster.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def first_available(self) -> Node | None:
+        """The first declared node with α_j = 1 — the deterministic
+        fail-over leader candidate when the current leader goes away."""
+        for n in self.cluster.nodes:
+            if n.available:
+                return n
+        return None
+
+    def leader_available(self) -> bool:
+        if self.leader is None:
+            return False
+        try:
+            return self.node(self.leader).available
+        except KeyError:
+            return False
+
+    def ensure_leader(self, preferred: str | None = None) -> str | None:
+        """The one fail-over policy (Alg. 1 line 2 under churn), shared by
+        the scheduler FSM and the fleet controller: elect ``preferred``
+        when it names an available node; otherwise keep the sitting leader
+        while it is available; otherwise the first available declared
+        node.  Returns the leader's name, or None — clearing the seat —
+        when no node is available."""
+        if preferred is not None:
+            try:
+                if self.node(preferred).available:
+                    return self.elect_leader(preferred).name
+            except KeyError:
+                pass
+        if self.leader_available():
+            return self.leader
+        candidate = self.first_available()
+        if candidate is None:
+            self.leader = None
+            return None
+        return self.elect_leader(candidate.name).name
+
     def elect_leader(self, receiving_node: str) -> Node:
         """Alg. 1 line 2: leader = the node that received the request."""
         for n in self.cluster.nodes:

@@ -16,8 +16,19 @@ a model name but differ in shape can never collide, and editing a model's
 blocks orphans its persisted fronts exactly like a board swap orphans
 calibrations.
 
-Keeping both hashes here (rather than duplicated in each subsystem) is what
-guarantees the key spaces cannot drift apart.
+A cached frontier is finally only valid for the *membership* it was planned
+over: the planner restricts itself to available nodes (Eq. 4's A(N_φ)), so
+a plan computed while a node was away is a different plan than one computed
+with it present, even though the declared topology — and therefore the
+cluster fingerprint — is unchanged.  :func:`membership_fingerprint` digests
+the availability mask over the declared node list, which lets caches file
+fronts for distinct memberships *side by side*: a node that leaves and
+later returns flips the mask back to a previously-seen value, and the warm
+front for that membership serves again with zero DP work
+(``repro.fleet`` drives this lifecycle).
+
+Keeping all three hashes here (rather than duplicated in each subsystem) is
+what guarantees the key spaces cannot drift apart.
 """
 
 from __future__ import annotations
@@ -46,6 +57,16 @@ def cluster_fingerprint(cluster: Cluster) -> str:
         for n in cluster.nodes
     ]
     return _digest(spec)
+
+
+def membership_fingerprint(cluster: Cluster) -> str:
+    """A 16-hex-digit digest of the cluster's availability mask A(N_φ),
+    ordered by the declared node list.  Two clusters with the same declared
+    topology hash equal under :func:`cluster_fingerprint` whatever their
+    availability; this hash separates their *memberships* — the same set of
+    nodes away always yields the same digest, so a leave-then-return
+    membership maps back onto its original cache entries."""
+    return _digest([(n.name, bool(n.available)) for n in cluster.nodes])
 
 
 def dag_fingerprint(dag: "ModelDAG") -> str:

@@ -80,8 +80,11 @@ class LeaderFSM:
         assert self.state == State.ANALYZE, f"busy in {self.state}"
         self.current = req
         self.trace.append((now, State.ANALYZE))
-        leader = self.manager.leader or self.manager.cluster.nodes[0].name
-        self.manager.elect_leader(leader)
+        # churn-aware leadership: keep the sitting leader while it is alive,
+        # otherwise fail over to the first available node (the request is
+        # re-received there — Alg. 1 line 2 with a churned fleet)
+        if self.manager.ensure_leader() is None:
+            raise RuntimeError("no available node to lead the request")
         cluster = self.manager.refresh_availability(now)
 
         self.state = State.EXPLORE

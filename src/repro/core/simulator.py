@@ -34,6 +34,10 @@ class SimRequest:
     delta: float = 1.0
     # Per-request planning objective; None inherits the simulator's default.
     objective: Objective | None = None
+    # Latency SLO in seconds (None = unconstrained); violations are counted
+    # per request in the report, which is how churn-induced retries show up
+    # as a serving-quality figure and not just extra latency.
+    slo: float | None = None
 
 
 @dataclasses.dataclass
@@ -59,10 +63,20 @@ class RequestRecord:
     # account against what the (possibly diverging) hardware actually did.
     predicted_latency: float = 0.0
     predicted_energy: float = 0.0
+    # Churn accounting: how many times a mid-request node failure forced a
+    # full re-plan-and-retry, and how many planned shards sat on nodes that
+    # had to be abandoned (the work that migrated to survivors).
+    retries: int = 0
+    migrations: int = 0
+    slo: float | None = None
 
     @property
     def latency(self) -> float:
         return self.completion - self.arrival
+
+    @property
+    def slo_violated(self) -> bool:
+        return self.slo is not None and self.latency > self.slo
 
 
 @dataclasses.dataclass
@@ -125,6 +139,21 @@ class SimReport:
         mean = lambda xs: sum(xs) / len(xs) if xs else 0.0  # noqa: E731
         return {"latency": mean(lat_errs), "energy": mean(en_errs)}
 
+    # ---------------------------------------------------- churn accounting
+    def total_retries(self) -> int:
+        """Mid-request failures retried to completion across all requests."""
+        return sum(r.retries for r in self.records)
+
+    def total_migrations(self) -> int:
+        """Planned shards abandoned on a failed node and re-planned onto
+        survivors."""
+        return sum(r.migrations for r in self.records)
+
+    def slo_violations(self) -> int:
+        """Requests that finished past their declared SLO (requests with
+        no SLO never count)."""
+        return sum(1 for r in self.records if r.slo_violated)
+
     def makespan(self) -> float:
         return max((r.completion for r in self.records), default=0.0)
 
@@ -168,14 +197,40 @@ class EdgeSimulator:
     serving.  The cache's *planner config* then owns planning
     (HiDP, and the provider baked into ``cache.planner.config``), so
     combining it with a baseline ``strategy`` or a simulator-level
-    ``provider`` is rejected rather than silently mislabelling results."""
+    ``provider`` is rejected rather than silently mislabelling results.
+
+    ``fleet`` (a ``repro.fleet.FleetController``) makes the cluster
+    *churn*: the controller's trace is replayed as simulated time advances
+    — graceful events (leave/join/battery/thermal) apply at each request's
+    planning boundary, while a ``crash`` fails mid-request.  A failed
+    request's doomed work is truncated at the crash instant (survivors'
+    partial shards stay on the timeline as wasted-but-metered compute),
+    the leader re-elects if it was the casualty
+    (``ClusterManager.elect_leader`` via the controller), and the request
+    re-plans on the survivors and retries from the crash time —
+    ``RequestRecord.retries``/``migrations`` count the damage, and
+    ``SimRequest.slo`` lets the report turn it into SLO violations.  With
+    a ``plan_cache`` the cache must be membership-keyed
+    (``membership_source=fleet``): each new membership costs one frontier
+    pass per tenant and a *returning* membership serves warm.  Feedback
+    observations from shards that completed before a crash are kept — the
+    hardware really did execute them."""
 
     def __init__(self, cluster: Cluster, strategy: str | Strategy = "hidp",
                  leader: str | None = None,
                  provider: CostProvider | None = None,
                  ground_truth=None, feedback=None,
                  objective: Objective | None = None,
-                 plan_cache=None):
+                 plan_cache=None, fleet=None):
+        if fleet is not None and plan_cache is not None:
+            ms = plan_cache.membership_source
+            if not (ms is fleet or ms is fleet.manager):
+                raise ValueError(
+                    "a churning fleet with a membership-blind (or "
+                    "differently-sourced) plan_cache would serve plans for "
+                    "departed nodes; construct the cache with "
+                    "membership_source=fleet (or fleet.manager, the same "
+                    "object this simulator churns)")
         if plan_cache is not None:
             if not (strategy == "hidp" or strategy is STRATEGIES["hidp"]):
                 raise ValueError(
@@ -189,17 +244,27 @@ class EdgeSimulator:
         self.cluster = cluster
         self.strategy: Strategy = (STRATEGIES[strategy]
                                    if isinstance(strategy, str) else strategy)
-        self.leader = leader or cluster.nodes[0].name
+        self.fleet = fleet
+        if fleet is not None:
+            self.leader = leader or fleet.manager.leader \
+                or cluster.nodes[0].name
+            fleet.elect_leader(self.leader)
+        else:
+            self.leader = leader or cluster.nodes[0].name
         self.provider = provider
         self.ground_truth = ground_truth
         self.feedback = feedback
         self.objective = objective
         self.plan_cache = plan_cache
+        self.leader_elections = 0
         # capacity-1 resources
         self.proc_busy: dict[tuple[str, str], float] = {}
         self.medium_busy: float = 0.0
+        self.medium_spans: list[tuple[float, float]] = []
         self.radio_energy: float = 0.0
         self.spans: list[ExecutionSpan] = []
+        # measurements buffered per attempt; see _observe
+        self._pending_obs: list[tuple] = []
 
     # ----------------------------------------------------------- reservations
     def _reserve_proc(self, node: str, proc: str, ready: float,
@@ -220,6 +285,7 @@ class EdgeSimulator:
         start = max(ready, self.medium_busy)
         end = start + comm_time(nbytes, bw, rtt)
         self.medium_busy = end
+        self.medium_spans.append((start, end))
         self.radio_energy += self.RADIO_POWER * (end - start)
         return end
 
@@ -245,13 +311,29 @@ class EdgeSimulator:
 
     def _observe(self, node: Node, proc_idx: int, flops: float,
                  nbytes: float, kind: str, delta: float,
-                 measured: float, joules: float) -> None:
-        """Report one executed shard to the feedback loop (run-time scheduler
-        measurements re-entering the Model Analyzer)."""
+                 measured: float, joules: float, end: float) -> None:
+        """Buffer one executed shard's measurement (run-time scheduler
+        measurements re-entering the Model Analyzer).  Buffered rather
+        than reported immediately because the attempt's fate decides what
+        the loop may see: a crashed attempt only produced real
+        measurements for shards that *completed* before the crash instant
+        — everything later is unwound and must never become a phantom
+        observation (or be double-counted by the retry)."""
         if self.feedback is not None and flops > 0:
             key = f"{node.name}/{node.processors[proc_idx].name}"
-            self.feedback.observe(key, kind, flops * delta, nbytes, measured,
-                                  energy_j=joules if joules > 0 else None)
+            self._pending_obs.append(
+                (end, key, kind, flops * delta, nbytes, measured, joules))
+
+    def _flush_observations(self, up_to: float | None = None) -> None:
+        """Report buffered measurements to the feedback loop — all of
+        them, or (after a crash) only shards that finished by ``up_to``."""
+        for end, key, kind, work, nbytes, measured, joules \
+                in self._pending_obs:
+            if up_to is None or end <= up_to + 1e-12:
+                self.feedback.observe(
+                    key, kind, work, nbytes, measured,
+                    energy_j=joules if joules > 0 else None)
+        self._pending_obs = []
 
     def _run_local(self, sub: ModelDAG, node: Node, lp: LocalPlan,
                    ready: float, delta: float, rid: int
@@ -277,7 +359,7 @@ class EdgeSimulator:
                                        watts, rid)
                 energy += watts * dur
                 self._observe(node, ri, seg.flops, seg.bytes_in, kind, delta,
-                              compute, watts * compute)
+                              compute, watts * compute, end=t)
             return t, energy
         assert isinstance(part, DataPartition)
         done = ready
@@ -294,24 +376,139 @@ class EdgeSimulator:
             energy += watts * dur
             self._observe(node, ri, sub.total_flops * f,
                           (sub.input_bytes + sub.output_bytes) * f, kind,
-                          delta, compute, watts * compute)
+                          delta, compute, watts * compute, end=end)
             done = max(done, end)
         return done, energy
 
     # ----------------------------------------------------------- one request
+    def _plan_for(self, req: SimRequest,
+                  objective: Objective | None) -> HiDPPlan:
+        """One planning pass at the current membership: through the
+        (membership-keyed) cache when wired, else a strategy call against
+        the live cluster."""
+        if self.plan_cache is not None:
+            return self.plan_cache.get(req.dag, objective=objective,
+                                       delta=req.delta)
+        kwargs = {}
+        if self.provider is not None:
+            kwargs["provider"] = self.provider
+        if objective is not None:
+            kwargs["objective"] = objective
+        cluster = (self.fleet.cluster if self.fleet is not None
+                   else self.cluster)
+        return self.strategy(req.dag, cluster, req.delta, **kwargs)
+
+    # ------------------------------------------------- fault-injection state
+    def _snapshot(self) -> tuple:
+        return (dict(self.proc_busy), self.medium_busy, self.radio_energy,
+                len(self.spans), len(self.medium_spans))
+
+    def _rollback_to_crash(self, snap: tuple, crash_t: float) -> float:
+        """Truncate a doomed attempt at the crash instant.  Work started
+        before the crash stays on the timeline (survivors were genuinely
+        busy executing shards that are now worthless — FLOPs pro-rated to
+        the truncated window, watts metered in full, and transfers billed
+        for their actual pre-crash airtime); everything scheduled past it
+        is unwound so the retry sees the resources free.  Returns the
+        wasted active energy, which the request still pays for."""
+        proc_busy, medium_busy, radio_energy, nspans, nmedium = snap
+        attempt = self.spans[nspans:]
+        del self.spans[nspans:]
+        self.proc_busy = proc_busy
+        # radio: re-bill only the airtime the attempt actually burned
+        # before the crash — per reservation, never idle gaps
+        medium_attempt = self.medium_spans[nmedium:]
+        del self.medium_spans[nmedium:]
+        self.medium_busy = medium_busy
+        self.radio_energy = radio_energy
+        wasted = 0.0
+        for m_start, m_end in medium_attempt:
+            if m_start >= crash_t:
+                continue
+            m_end = min(m_end, crash_t)
+            self.medium_spans.append((m_start, m_end))
+            self.medium_busy = max(self.medium_busy, m_end)
+            burned = self.RADIO_POWER * (m_end - m_start)
+            self.radio_energy += burned
+            wasted += burned
+        for s in attempt:
+            if s.start >= crash_t:
+                continue
+            end = min(s.end, crash_t)
+            frac = (end - s.start) / max(s.end - s.start, 1e-12)
+            self.spans.append(dataclasses.replace(s, end=end,
+                                                  flops=s.flops * frac))
+            key = (s.node, s.processor)
+            self.proc_busy[key] = max(self.proc_busy.get(key, 0.0), end)
+            wasted += s.watts * (end - s.start)
+        return wasted
+
+    def _sync_leader(self) -> None:
+        """Adopt the controller's leader (it re-elects whenever the sitting
+        leader goes unavailable — Alg. 1 line 2 under churn)."""
+        if self.fleet is None:
+            return
+        leader = self.fleet.manager.leader
+        if leader is not None and leader != self.leader:
+            self.leader = leader
+            self.leader_elections += 1
+
     def _run_request(self, req: SimRequest) -> RequestRecord:
         objective = req.objective or self.objective
-        if self.plan_cache is not None:
-            plan: HiDPPlan = self.plan_cache.get(req.dag, objective=objective,
-                                                 delta=req.delta)
-        else:
-            kwargs = {}
-            if self.provider is not None:
-                kwargs["provider"] = self.provider
-            if objective is not None:
-                kwargs["objective"] = objective
-            plan = self.strategy(req.dag, self.cluster, req.delta, **kwargs)
-        t = req.arrival + plan.planning_seconds      # DP overhead (~15 ms)
+        if self.fleet is not None:
+            # graceful events (leave/join/battery/thermal) land at the
+            # planning boundary; crashes are handled mid-request below
+            self.fleet.advance(req.arrival)
+            self._sync_leader()
+        start = req.arrival
+        total_energy = 0.0
+        retries = migrations = 0
+        while True:
+            plan = self._plan_for(req, objective)
+            snap = self._snapshot()
+            t, energy = self._execute_plan(req, plan,
+                                           start + plan.planning_seconds)
+            crash = None
+            if self.fleet is not None:
+                used = {a.node.name for a in plan.global_plan.assignments}
+                used.add(self.leader)
+                crash = self.fleet.next_failure(start, t, used)
+            if crash is None:
+                total_energy += energy
+                self._flush_observations()
+                break
+            # mid-request failure: truncate the doomed attempt, consume the
+            # trace through the crash (one coalesced membership epoch),
+            # re-elect if the leader fell, re-plan on survivors, retry;
+            # only shards that really finished before the crash reach the
+            # feedback loop
+            self._flush_observations(up_to=crash.time)
+            total_energy += self._rollback_to_crash(snap, crash.time)
+            self.fleet.advance(crash.time)
+            migrations += sum(
+                1 for a in plan.global_plan.assignments
+                if not self.fleet.manager.node(a.node.name).available)
+            retries += 1
+            self._sync_leader()
+            if self.fleet.manager.first_available() is None:
+                raise RuntimeError(
+                    f"request {req.request_id}: every node failed; nothing "
+                    "left to retry on")
+            start = crash.time
+        return RequestRecord(request_id=req.request_id,
+                             dag_name=req.dag.name,
+                             arrival=req.arrival, completion=t,
+                             active_energy=total_energy,
+                             mode=plan.global_plan.mode,
+                             predicted_latency=plan.predicted_latency,
+                             predicted_energy=plan.predicted_energy,
+                             retries=retries, migrations=migrations,
+                             slo=req.slo)
+
+    def _execute_plan(self, req: SimRequest, plan: HiDPPlan,
+                      t: float) -> tuple[float, float]:
+        """Execute one planned attempt starting at ``t`` (post-planning).
+        Returns (completion time, active energy incl. radio)."""
         gp = plan.global_plan
         energy = 0.0
         radio0 = self.radio_energy
@@ -362,11 +559,7 @@ class EdgeSimulator:
                     self.cluster.nodes[0].net_bw, 0.0))
             t += plan.extra_latency
         energy += self.radio_energy - radio0
-        return RequestRecord(request_id=req.request_id, dag_name=req.dag.name,
-                             arrival=req.arrival, completion=t,
-                             active_energy=energy, mode=gp.mode,
-                             predicted_latency=plan.predicted_latency,
-                             predicted_energy=plan.predicted_energy)
+        return t, energy
 
     # ------------------------------------------------------------------ drive
     def run(self, requests: Sequence[SimRequest]) -> SimReport:
@@ -381,10 +574,11 @@ def simulate(cluster: Cluster, strategy: str | Strategy,
              *, provider: CostProvider | None = None,
              ground_truth=None, feedback=None,
              objective: Objective | None = None,
-             plan_cache=None) -> SimReport:
+             plan_cache=None, fleet=None) -> SimReport:
     sim = EdgeSimulator(cluster, strategy, provider=provider,
                         ground_truth=ground_truth, feedback=feedback,
-                        objective=objective, plan_cache=plan_cache)
+                        objective=objective, plan_cache=plan_cache,
+                        fleet=fleet)
     reqs = [SimRequest(i, dag, t, delta)
             for i, (t, dag, delta) in enumerate(workload)]
     return sim.run(reqs)

@@ -1,0 +1,16 @@
+"""repro.fleet — churn-aware cluster dynamics.
+
+The subsystem that makes the serving/simulation stack elastic: seeded,
+replayable availability traces (:mod:`~repro.fleet.traces`), a
+:class:`FleetController` that replays them into membership epochs over the
+existing ``ClusterManager``/``HeartbeatMonitor`` machinery
+(:mod:`~repro.fleet.controller`), and — through
+``repro.core.fingerprint.membership_fingerprint`` — the hash that lets
+``PlanCache`` file warm fronts for distinct memberships side by side, so a
+node that leaves and returns re-serves its front with zero DP work.  See
+docs/fleet.md for the lifecycle.
+"""
+
+from .controller import FleetController, MembershipEpoch  # noqa: F401
+from .traces import (DOWN_KINDS, FAILURE_KINDS, KINDS,  # noqa: F401
+                     UP_KINDS, ChurnEvent, ChurnTrace)

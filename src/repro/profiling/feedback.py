@@ -213,6 +213,32 @@ class FeedbackLoop:
                 self._energy_reference[(k, kind)] = dataclasses.replace(
                     self.model.energy_entries[(k, kind)])
 
+    # ------------------------------------------------------------- churn
+    def forget_resource(self, node: str) -> int:
+        """Drop every drift window, observation buffer, and reference
+        snapshot for ``node`` (its node-level key and any ``node/proc``
+        processor keys).  A ``repro.fleet.FleetController`` calls this when
+        the node leaves the fleet: measurements from before an outage must
+        not sit in the window that judges the node's first post-return
+        shards — thermal state, DVFS residency, even the battery that
+        caused the outage all reset across it.  The fitted predictors in
+        the live model are *kept* (they are the best prior available);
+        references re-snapshot from them on the next observation.  Returns
+        the number of per-(key, kind) entries dropped."""
+        def ours(key: str) -> bool:
+            return key == node or key.startswith(f"{node}/")
+
+        dropped = 0
+        for table in (self._buffers, self._reference,
+                      self._energy_reference):
+            for k in [k for k in table if ours(k[0])]:
+                del table[k]
+                dropped += 1
+        for table in (self._errors, self._energy_errors):
+            for k in [k for k in table if ours(k)]:
+                del table[k]
+        return dropped
+
     # ---------------------------------------------------------- convenience
     def ingest_plan_execution(self, spans, plans: dict | None = None) -> int:
         """Feed a batch of simulator ExecutionSpans (duck-typed: .node,

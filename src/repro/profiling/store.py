@@ -12,8 +12,10 @@ history (the per-request plan cache can key on ``(fingerprint, version)``).
 The store also files **warm plan frontiers** next to the calibrations they
 were planned under (:meth:`save_fronts` / :meth:`load_fronts`): one
 ``fronts.json`` per cluster fingerprint, each entry stamped with the
-``calibration_version`` it is valid for and the ``dag_fingerprint`` of the
-tenant it serves.  ``repro.serving.plan_cache.PlanCache`` persists its warm
+``calibration_version`` it is valid for, the ``dag_fingerprint`` of the
+tenant it serves, and the ``membership_fingerprint`` of the availability
+mask it was planned over (fronts for distinct memberships persist side by
+side, so a node that leaves and returns is served warm across restarts).  ``repro.serving.plan_cache.PlanCache`` persists its warm
 table here so a restarted process serves every tenant without re-running
 the cold frontier pass; entries whose version no longer matches the live
 calibration are dropped on load, so a stale front can never be served.
@@ -24,6 +26,7 @@ payloads is the cache's job (``repro.core.plan_to_dict`` /
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import pathlib
@@ -33,6 +36,33 @@ from repro.core.cost_model import Cluster
 from repro.core.fingerprint import cluster_fingerprint
 
 from .learned import LearnedCostModel
+
+
+@contextlib.contextmanager
+def _advisory_lock(path: pathlib.Path):
+    """Best-effort exclusive advisory lock on ``path``'s sidecar
+    ``.lock`` file (``fcntl.flock``).  Two cooperating processes — a
+    serving fleet sharing one ``fronts.json`` — serialize their writes;
+    where ``fcntl`` is unavailable (non-POSIX) or the filesystem refuses
+    (some network mounts), the lock degrades to a no-op and the atomic
+    ``os.replace`` below still guarantees readers never see a torn file.
+    """
+    try:
+        import fcntl
+    except ImportError:                      # pragma: no cover - non-POSIX
+        yield
+        return
+    lock_path = path.with_suffix(path.suffix + ".lock")
+    with open(lock_path, "w") as lock:
+        try:
+            fcntl.flock(lock, fcntl.LOCK_EX)
+        except OSError:                      # pragma: no cover - odd mounts
+            yield
+            return
+        try:
+            yield
+        finally:
+            fcntl.flock(lock, fcntl.LOCK_UN)
 
 
 class CalibrationStore:
@@ -96,9 +126,13 @@ class CalibrationStore:
         Each entry is an opaque JSON dict the writer (``PlanCache``) built:
         at minimum ``dag_fingerprint``, ``dag_name``, ``delta``,
         ``calibration_version``, and a serialized ``front``.  The write is
-        atomic (temp file + ``os.replace``), mirroring the cache's
-        in-memory generation swap: a concurrent reader sees either the old
-        table or the new one, never a torn file.  Returns the entry count.
+        atomic (per-process temp file + ``os.replace``), mirroring the
+        cache's in-memory generation swap: a concurrent reader sees either
+        the old table or the new one, never a torn file.  Writers
+        additionally serialize on a best-effort advisory ``.lock`` file,
+        so two serving processes persisting to one shared store never
+        interleave (last writer wins whole-file, not field-by-field).
+        Returns the entry count.
         """
         d = self._dir(cluster)
         d.mkdir(parents=True, exist_ok=True)
@@ -108,9 +142,10 @@ class CalibrationStore:
             "entries": list(entries),
         }
         path = self.fronts_path(cluster)
-        tmp = path.with_suffix(".json.tmp")
-        tmp.write_text(json.dumps(payload, sort_keys=True))
-        os.replace(tmp, path)
+        tmp = path.with_suffix(f".json.{os.getpid()}.tmp")
+        with _advisory_lock(path):
+            tmp.write_text(json.dumps(payload, sort_keys=True))
+            os.replace(tmp, path)
         return len(entries)
 
     def load_fronts(self, cluster: Cluster) -> list[dict]:

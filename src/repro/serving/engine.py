@@ -77,7 +77,14 @@ class ServingEngine:
     (:meth:`dominant_objective`); per-tenant selections land in
     ``tenant_plans`` keyed by dag fingerprint.  Wire the same ``feedback``
     loop as the cache's ``version_source`` and the bump is atomic with the
-    refit."""
+    refit.
+
+    Under churn (``repro.fleet``), wire a ``FleetController``'s
+    ``on_epoch`` to :meth:`on_membership_change` and give the cache the
+    controller as its ``membership_source``: every membership epoch then
+    re-enters EXPLORE with one plan resolution per in-flight tenant — a
+    single frontier pass for a never-seen membership, a pure warm hit for
+    a returning one (see docs/fleet.md)."""
 
     def __init__(self, model: Model, params: dict, *, max_batch: int = 4,
                  max_len: int = 128, plan=None, donate: bool = True,
@@ -201,6 +208,39 @@ class ServingEngine:
                 counts[r.objective] += 1
         return max(METRICS, key=counts.__getitem__)
 
+    def _replan_in_flight_tenants(self) -> None:
+        """One cache resolution per in-flight tenant, each at that tenant's
+        dominant objective and keyed delta; the engine-level plan follows
+        the busiest tenant (ties break low-fingerprint-first), never an
+        arbitrary last writer."""
+        traffic = self._tenant_traffic()
+        for fp in sorted(traffic):
+            dag = traffic[fp][0]
+            self.tenant_plans[fp] = self.plan_cache.get(
+                dag, objective=self.dominant_objective(dag),
+                delta=self._tenant_deltas.get(fp))
+        if traffic:
+            busiest = max(sorted(traffic), key=lambda f: traffic[f][1])
+            self.plan = self.tenant_plans[busiest]
+
+    def on_membership_change(self, epoch=None) -> None:
+        """The fleet's membership moved (a ``repro.fleet.FleetController``
+        epoch — wire this as its ``on_epoch`` callback): re-enter EXPLORE
+        with exactly one plan resolution per in-flight tenant.  Unlike
+        drift, nothing is invalidated — the cache key's membership
+        fingerprint changed under us, so a brand-new membership costs one
+        frontier pass per affected tenant while a *returning* membership
+        (a node that left and came back) resolves warm with zero DP work.
+        ``epoch`` (the :class:`~repro.fleet.MembershipEpoch`) is accepted
+        and ignored so the callback wires directly."""
+        self.state = State.EXPLORE
+        self.trace.append(self.state)
+        self.replans += 1
+        if self.plan_cache is not None:
+            self._replan_in_flight_tenants()
+        if self.on_replan is not None:
+            self.on_replan()
+
     def run_until_done(self, max_steps: int = 10_000) -> dict[int, Request]:
         for _ in range(max_steps):
             if not self.queue and self.active() == 0:
@@ -308,19 +348,7 @@ class ServingEngine:
                     # the objective that tenant's traffic wants and the
                     # delta its front was keyed under
                     self.plan_cache.on_drift()
-                    traffic = self._tenant_traffic()
-                    for fp in sorted(traffic):
-                        dag = traffic[fp][0]
-                        self.tenant_plans[fp] = self.plan_cache.get(
-                            dag, objective=self.dominant_objective(dag),
-                            delta=self._tenant_deltas.get(fp))
-                    if traffic:
-                        # engine-level plan: the busiest tenant's selection
-                        # (ties break low-fingerprint-first), never an
-                        # arbitrary last writer
-                        busiest = max(sorted(traffic),
-                                      key=lambda f: traffic[f][1])
-                        self.plan = self.tenant_plans[busiest]
+                    self._replan_in_flight_tenants()
                 if self.on_replan is not None:
                     self.on_replan()
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))

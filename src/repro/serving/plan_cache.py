@@ -5,10 +5,10 @@ concurrent DNN workloads (the paper's Fig. 7 request mixes; CoEdge,
 arXiv:2012.03257, frames the same multi-workload scenario).  The paper pays
 its ~15 ms two-tier DP on every request; this cache amortizes it across
 requests *and tenants*: one (objective-independent) frontier pass per
-``(cluster fingerprint, calibration version, dag fingerprint, δ)``, then
-any request's objective — from any tenant — is resolved against the cached
-:class:`~repro.core.pareto.ParetoFront` with zero DP work: a dict lookup
-plus an O(front-width) ``select``.
+``(cluster fingerprint, membership fingerprint, calibration version,
+dag fingerprint, δ)``, then any request's objective — from any tenant — is
+resolved against the cached :class:`~repro.core.pareto.ParetoFront` with
+zero DP work: a dict lookup plus an O(front-width) ``select``.
 
 Keys and invalidation:
 
@@ -17,6 +17,19 @@ Keys and invalidation:
   files calibrations in ``CalibrationStore``, so plan-cache keys and
   calibration paths can never drift apart.  A board swap or link upgrade
   changes the fingerprint and cleanly orphans every cached front.
+* the **membership fingerprint**
+  (:func:`repro.core.fingerprint.membership_fingerprint`) identifies *who
+  is in the fleet right now* — the availability mask the planner restricts
+  itself to.  Wire ``membership_source=`` (anything with a live
+  ``.cluster`` attribute: a ``repro.core.ClusterManager`` or a
+  ``repro.fleet.FleetController``) and every lookup keys on — and plans
+  against — the current membership.  A node leaving is **not** an
+  invalidation: fronts for distinct memberships live side by side in the
+  same table (and in the same persisted ``fronts.json``), so a node that
+  leaves and later *returns* flips the mask back to a seen value and the
+  original warm front serves again with zero DP work, bit-identically.
+  Without a ``membership_source`` the cache keys on the construction-time
+  mask — the static-fleet behaviour, unchanged.
 * the **dag fingerprint** (:func:`repro.core.fingerprint.dag_fingerprint`)
   identifies the tenant by its full cost surface, not its name — two
   workloads that share a model name but differ in shape can never collide,
@@ -56,6 +69,11 @@ Persistence (warm restarts):
   front can never serve.  A restarted process then serves every tenant's
   first request with zero DP work, and selections off loaded fronts are
   bit-identical to the freshly built ones (floats survive JSON exactly).
+* ``persist_every=N`` auto-persists after every N-th insert (frontier
+  pass), so a crashed process loses at most one generation of N-1 new
+  fronts; the underlying ``save_fronts`` write is atomic and guarded by a
+  best-effort advisory file lock, so two serving processes sharing one
+  store never interleave a write.
 
 ``get`` stamps the returned plan's ``planning_seconds`` with what the
 caller actually waited — the full frontier pass on a miss, the lookup
@@ -72,7 +90,8 @@ from collections import OrderedDict
 
 from repro.core.cost_model import Cluster
 from repro.core.dag import ModelDAG
-from repro.core.fingerprint import cluster_fingerprint, dag_fingerprint
+from repro.core.fingerprint import (cluster_fingerprint, dag_fingerprint,
+                                    membership_fingerprint)
 from repro.core.hidp import (HiDPPlan, HiDPPlanner, plan_from_dict,
                              plan_to_dict)
 from repro.core.objective import Objective
@@ -90,6 +109,7 @@ class CacheEntry:
     dag_fingerprint: str
     delta: float
     front: ParetoFront
+    membership_fingerprint: str = ""
     _nbytes: int | None = None
 
     @property
@@ -157,6 +177,8 @@ class PlanCache:
             ``CalibrationStore``).
         eviction: the bounded-budget policy (:class:`LRUEviction`), or
             None for an unbounded table.
+        persist_every: auto-persist period in inserts (None = only on
+            demand); requires ``store=``.
         hits / misses / evictions / invalidations / loaded: lifetime
             counters; ``misses`` counts EXPLORE re-plans (full frontier
             passes), ``loaded`` counts fronts served warm from a store.
@@ -164,13 +186,23 @@ class PlanCache:
 
     def __init__(self, planner: HiDPPlanner, cluster: Cluster, *,
                  version: int = 0, version_source=None,
-                 eviction: LRUEviction | None = None, store=None):
+                 eviction: LRUEviction | None = None, store=None,
+                 membership_source=None, persist_every: int | None = None):
         self.planner = planner
         self.cluster = cluster
         self.fingerprint = cluster_fingerprint(cluster)
         self.eviction = eviction
         self._store = store
         self._version_source = version_source
+        self.membership_source = membership_source
+        if persist_every is not None:
+            if persist_every < 1:
+                raise ValueError("persist_every must be >= 1")
+            if store is None:
+                raise ValueError("persist_every needs a store to persist "
+                                 "to: wire store= at construction")
+        self.persist_every = persist_every
+        self._inserts_since_persist = 0
         if version_source is not None:
             version = version_source.calibration_version
         # one atomically-swapped generation: (version, {key: CacheEntry}),
@@ -195,11 +227,29 @@ class PlanCache:
             return int(self._version_source.calibration_version)
         return self._generation[0]
 
+    def live_cluster(self) -> Cluster:
+        """The cluster lookups plan against: the ``membership_source``'s
+        current view when one is wired (live availability over the same
+        declared topology), the construction-time cluster otherwise."""
+        if self.membership_source is not None:
+            return self.membership_source.cluster
+        return self.cluster
+
+    @property
+    def membership_fingerprint(self) -> str:
+        """The availability-mask hash of :meth:`live_cluster` — read live,
+        so a ``FleetController`` membership epoch re-keys lookups without
+        calling into the cache at all (a returning membership lands back
+        on its original entries)."""
+        return membership_fingerprint(self.live_cluster())
+
     def key(self, dag: ModelDAG, delta: float | None = None) -> tuple:
-        """``(cluster fp, calibration version, dag fingerprint, δ)``."""
+        """``(cluster fp, membership fp, calibration version,
+        dag fingerprint, δ)``."""
         if delta is None:
             delta = self.planner.config.delta
-        return (self.fingerprint, self.version, dag_fingerprint(dag), delta)
+        return (self.fingerprint, self.membership_fingerprint, self.version,
+                dag_fingerprint(dag), delta)
 
     # ------------------------------------------------------------- lookups
     def _table(self, version: int) -> "OrderedDict[tuple, CacheEntry]":
@@ -214,11 +264,13 @@ class PlanCache:
 
     def front(self, dag: ModelDAG, delta: float | None = None) -> ParetoFront:
         """The cached frontier for ``dag`` — one DP pass per tenant per
-        generation.  A hit refreshes the tenant's LRU position; a miss
-        plans, inserts, and then lets the eviction policy trim *other*
-        tenants back under budget."""
+        (membership, generation).  A hit refreshes the tenant's LRU
+        position; a miss plans against the *live* membership, inserts, and
+        then lets the eviction policy trim *other* tenants back under
+        budget.  With ``persist_every`` wired, every N-th insert flushes
+        the warm table to the store."""
         key = self.key(dag, delta)
-        entries = self._table(key[1])
+        entries = self._table(key[2])
         entry = entries.get(key)
         if entry is not None:
             self.hits += 1
@@ -227,11 +279,16 @@ class PlanCache:
         self.misses += 1
         if delta is None:
             delta = self.planner.config.delta
-        front = self.planner.at_delta(delta).front(dag, self.cluster)
+        front = self.planner.at_delta(delta).front(dag, self.live_cluster())
         entries[key] = CacheEntry(dag_name=dag.name,
-                                  dag_fingerprint=key[2], delta=delta,
-                                  front=front)
+                                  dag_fingerprint=key[3], delta=delta,
+                                  front=front,
+                                  membership_fingerprint=key[1])
         self._evict(entries, protect=key)
+        self._inserts_since_persist += 1
+        if (self.persist_every is not None
+                and self._inserts_since_persist >= self.persist_every):
+            self.persist()
         return front
 
     def get(self, dag: ModelDAG, objective: Objective | str | None = None,
@@ -311,9 +368,11 @@ class PlanCache:
             {"dag_fingerprint": e.dag_fingerprint, "dag_name": e.dag_name,
              "delta": e.delta, "calibration_version": version,
              "store_calibration_version": store_version,
+             "membership_fingerprint": e.membership_fingerprint,
              "front": e.front.to_dict(plan_to_dict)}
             for e in entries.values()
         ]
+        self._inserts_since_persist = 0
         return store.save_fronts(self.cluster, payload)
 
     def warm_from(self, store=None) -> int:
@@ -336,6 +395,11 @@ class PlanCache:
         version = self.version
         store_version = self._store_version(store)
         entries = self._table(version)
+        # entries written before membership keying existed carry no mask
+        # hash; file them under the full-membership mask they were planned
+        # over (every declared node available)
+        full = membership_fingerprint(self.cluster.with_availability(
+            [True] * len(self.cluster.nodes)))
         n = 0
         for raw in store.load_fronts(self.cluster):
             if (raw.get("calibration_version") != version
@@ -344,12 +408,15 @@ class PlanCache:
                 continue                      # stale: never serve it
             front = ParetoFront.from_dict(
                 raw["front"], lambda d: plan_from_dict(d, self.cluster))
-            key = (self.fingerprint, version, raw["dag_fingerprint"],
-                   raw["delta"])
+            mfp = raw.get("membership_fingerprint") or full
+            # fronts for *every* membership load side by side: a returning
+            # membership finds its entry warm even across a restart
+            key = (self.fingerprint, mfp, version,
+                   raw["dag_fingerprint"], raw["delta"])
             entries[key] = CacheEntry(
                 dag_name=raw["dag_name"],
                 dag_fingerprint=raw["dag_fingerprint"], delta=raw["delta"],
-                front=front,
+                front=front, membership_fingerprint=mfp,
                 _nbytes=len(json.dumps(raw["front"])))
             n += 1
         self._evict(entries)
@@ -380,4 +447,5 @@ class PlanCache:
                 "entries": len(self), "nbytes": self.nbytes(),
                 "tenants": self.tenants(), "version": self.version,
                 "fingerprint": self.fingerprint,
+                "membership": self.membership_fingerprint,
                 "hit_rate": self.hit_rate()}

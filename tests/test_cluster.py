@@ -1,0 +1,124 @@
+"""Direct unit tests for ``HeartbeatMonitor`` and ``ClusterManager`` —
+previously only exercised indirectly through the simulator.
+
+The availability machinery is the substrate ``repro.fleet`` builds on, so
+its edges are pinned here: dead-node expiry at *exactly* the timeout
+boundary, leader re-election when the leader dies, and the
+``refresh_availability`` round-trip (a node that resumes beating comes
+back)."""
+
+import pytest
+
+from repro.core import ClusterManager, HeartbeatMonitor
+from repro.core.edge_models import paper_cluster
+
+
+# --------------------------------------------------------------------------
+# HeartbeatMonitor
+# --------------------------------------------------------------------------
+
+def test_expiry_at_exactly_the_timeout_boundary():
+    """alive ⇔ (now - last_seen) <= interval * miss_threshold: the boundary
+    instant itself still counts as alive; any later instant does not."""
+    mon = HeartbeatMonitor(interval=0.5, miss_threshold=3)
+    mon.beat("a", 10.0)
+    deadline = 10.0 + 0.5 * 3
+    assert mon.alive("a", deadline)                 # exactly at the boundary
+    assert not mon.alive("a", deadline + 1e-9)      # one tick past it
+    assert mon.alive("a", 10.0)                     # trivially fresh
+
+
+def test_never_seen_node_is_dead_and_beat_revives():
+    mon = HeartbeatMonitor(interval=0.5, miss_threshold=3)
+    assert not mon.alive("ghost", 0.0)
+    mon.beat("ghost", 5.0)
+    assert mon.alive("ghost", 5.0)
+    # a fresh beat fully resets the expiry window
+    mon.beat("ghost", 100.0)
+    assert mon.alive("ghost", 101.4)
+    assert not mon.alive("ghost", 101.6)
+
+
+# --------------------------------------------------------------------------
+# ClusterManager: leadership
+# --------------------------------------------------------------------------
+
+def test_elect_leader_requires_availability():
+    mgr = ClusterManager(paper_cluster())
+    mgr.set_available("tx2", False)
+    with pytest.raises(RuntimeError):
+        mgr.elect_leader("tx2")
+    with pytest.raises(KeyError):
+        mgr.elect_leader("not-a-node")
+    assert mgr.elect_leader("orin_nx").name == "orin_nx"
+    assert mgr.leader == "orin_nx"
+
+
+def test_reelection_when_the_leader_dies():
+    """The fail-over path: the sitting leader goes away, a survivor is
+    electable, and the old leader's self-availability privilege dies with
+    its seat."""
+    mgr = ClusterManager(paper_cluster())
+    mgr.elect_leader("orin_nx")
+    assert mgr.leader_available()
+    mgr.set_available("orin_nx", False)
+    assert not mgr.leader_available()
+    # deterministic fail-over candidate: first available declared node
+    assert mgr.first_available().name == "tx2"
+    mgr.elect_leader("tx2")
+    assert mgr.leader == "tx2" and mgr.leader_available()
+    # the deposed leader is no longer "available to itself": with no beats
+    # at all, refresh marks everyone but the new leader dead
+    cluster = mgr.refresh_availability(now=100.0)
+    av = dict(zip((n.name for n in cluster.nodes), cluster.availability()))
+    assert av["tx2"] == 1 and av["orin_nx"] == 0
+
+
+def test_first_available_none_when_fleet_empty():
+    mgr = ClusterManager(paper_cluster(2))
+    for n in mgr.nodes():
+        mgr.set_available(n.name, False)
+    assert mgr.first_available() is None
+    assert mgr.available_count() == 0
+    assert not mgr.leader_available()
+
+
+# --------------------------------------------------------------------------
+# ClusterManager: refresh_availability round-trip
+# --------------------------------------------------------------------------
+
+def test_refresh_availability_round_trip():
+    """Stop beating → dead after the timeout; resume beating → alive again.
+    The leader never needs its own beats."""
+    mgr = ClusterManager(paper_cluster())
+    mgr.elect_leader("orin_nx")
+    for n in mgr.nodes():
+        mgr.monitor.beat(n.name, 0.0)
+    # everyone fresh at t=1.0
+    av = dict(zip((n.name for n in mgr.nodes()),
+                  mgr.refresh_availability(1.0).availability()))
+    assert all(av.values())
+    # rpi4 goes silent; at t=2.0 it has missed > 3 intervals
+    for n in mgr.nodes():
+        if n.name != "rpi4":
+            mgr.monitor.beat(n.name, 2.0)
+    av = dict(zip((n.name for n in mgr.nodes()),
+                  mgr.refresh_availability(2.0).availability()))
+    assert av["rpi4"] == 0
+    assert av["orin_nx"] == 1 and av["tx2"] == 1
+    # rpi4 resumes beating: the very next refresh restores it
+    mgr.monitor.beat("rpi4", 2.5)
+    av = dict(zip((n.name for n in mgr.nodes()),
+                  mgr.refresh_availability(2.5).availability()))
+    assert av["rpi4"] == 1
+
+
+def test_set_available_round_trip_and_counts():
+    mgr = ClusterManager(paper_cluster())
+    assert mgr.available_count() == 5
+    mgr.set_available("nano", False)
+    assert mgr.available_count() == 4
+    assert not mgr.node("nano").available
+    mgr.set_available("nano", True)
+    assert mgr.available_count() == 5
+    assert mgr.node("nano").available

@@ -1,0 +1,331 @@
+"""repro.fleet — churn traces, membership epochs, and mid-request fault
+injection through the simulator.
+
+The churn-aware guarantees, as tests (docs/fleet.md):
+
+* traces are seeded and replayable: the same generator arguments always
+  produce the same events, and generated schedules stay plausible (only
+  present nodes leave, only absent nodes rejoin);
+* a ``FleetController`` coalesces simultaneously-applied events into one
+  membership epoch, re-elects the leader when it falls, and a
+  leave-then-return flips the membership fingerprint back to its original
+  value — the identity membership-keyed caching rides on;
+* a ``crash`` mid-request fails its shards: the request re-plans on the
+  survivors and retries to completion, the crashed node executes nothing
+  past the crash instant, and ``SimReport`` accounts
+  retries/migrations/SLO violations per request;
+* with a membership-keyed ``PlanCache``, a churn stream costs exactly one
+  frontier pass per (tenant, membership) — and a returning membership
+  costs none at all.
+"""
+
+import pytest
+
+from repro.core import (EdgeSimulator, HiDPPlanner, Objective,
+                        PlannerConfig, SimRequest, membership_fingerprint,
+                        simulate)
+from repro.core.edge_models import (EDGE_MODELS, MODEL_DELTA, paper_cluster)
+from repro.fleet import (DOWN_KINDS, UP_KINDS, ChurnEvent, ChurnTrace,
+                         FleetController)
+from repro.serving import PlanCache
+
+
+def dag_delta(name="resnet152"):
+    return EDGE_MODELS[name](), MODEL_DELTA[name]
+
+
+# --------------------------------------------------------------------------
+# traces
+# --------------------------------------------------------------------------
+
+def test_event_kinds_validated():
+    with pytest.raises(ValueError):
+        ChurnEvent(0.0, "a", "explode")
+    assert ChurnEvent(0.0, "a", "crash").is_failure
+    assert not ChurnEvent(0.0, "a", "leave").is_failure
+    assert ChurnEvent(0.0, "a", "battery_drain").goes_down
+    assert not ChurnEvent(0.0, "a", "battery_ok").goes_down
+
+
+def test_scripted_trace_sorts_and_windows():
+    tr = ChurnTrace.scripted([(2.0, "b", "join"), (1.0, "a", "crash")])
+    assert [e.time for e in tr] == [1.0, 2.0]
+    assert tr.window(0.0, 1.0) == (tr.events[0],)      # half-open: (t0, t1]
+    assert tr.window(1.0, 5.0) == (tr.events[1],)
+
+
+def test_poisson_trace_is_seeded_and_plausible():
+    names = ["a", "b", "c"]
+    t1 = ChurnTrace.poisson(names, rate=0.5, horizon=100.0, seed=7)
+    t2 = ChurnTrace.poisson(names, rate=0.5, horizon=100.0, seed=7)
+    t3 = ChurnTrace.poisson(names, rate=0.5, horizon=100.0, seed=8)
+    assert t1.events == t2.events                       # replayable
+    assert t1.events != t3.events                       # seed matters
+    assert len(t1) > 0
+    # plausibility: a node's events strictly alternate down/up
+    for n in names:
+        kinds = [e.kind in DOWN_KINDS for e in t1 if e.node == n]
+        assert all(a != b for a, b in zip(kinds, kinds[1:]))
+        if kinds:
+            assert kinds[0]                             # starts present
+    # protected nodes are never touched
+    prot = ChurnTrace.poisson(names, rate=0.5, horizon=100.0, seed=7,
+                              protect=["a"])
+    assert all(e.node != "a" for e in prot)
+
+
+def test_battery_and_thermal_duty_cycles_alternate():
+    tr = ChurnTrace.battery(["a", "b"], drain_after=10.0,
+                            recharge_after=5.0, horizon=40.0, stagger=1.0)
+    for n in ("a", "b"):
+        evs = [e for e in tr if e.node == n]
+        assert [e.kind in DOWN_KINDS for e in evs][::2] == \
+            [True] * len(evs[::2])
+        assert all(e.kind in {"battery_drain", "battery_ok"} for e in evs)
+    th = ChurnTrace.thermal(["a"], throttle_after=3.0, cool_after=2.0,
+                            horizon=12.0)
+    assert [e.kind for e in th] == ["thermal_throttle", "recover",
+                                    "thermal_throttle", "recover"][:len(th)]
+    assert all(k in (DOWN_KINDS | UP_KINDS) for k in
+               {e.kind for e in tr.merge(th)})
+
+
+def test_merge_keeps_time_order():
+    a = ChurnTrace.scripted([(1.0, "a", "leave"), (3.0, "a", "join")])
+    b = ChurnTrace.scripted([(2.0, "b", "crash")])
+    assert [e.time for e in a.merge(b)] == [1.0, 2.0, 3.0]
+
+
+# --------------------------------------------------------------------------
+# controller: epochs, leadership, membership identity
+# --------------------------------------------------------------------------
+
+def test_controller_epochs_coalesce_and_fingerprint_returns():
+    cluster = paper_cluster()
+    fp0 = membership_fingerprint(cluster)
+    trace = ChurnTrace.scripted([
+        (1.0, "tx2", "leave"), (1.0, "nano", "leave"),   # same instant
+        (5.0, "tx2", "join"), (6.0, "nano", "join"),
+    ])
+    seen = []
+    fleet = FleetController(cluster, trace,
+                            on_epoch=lambda ep: seen.append(ep))
+    assert fleet.epoch == 0
+    assert fleet.membership_fingerprint() == fp0
+    applied = fleet.advance(2.0)
+    assert len(applied) == 2
+    assert fleet.epoch == 1                    # two events, ONE epoch
+    assert fleet.membership_fingerprint() != fp0
+    assert fleet.available_names() == ("orin_nx", "rpi5", "rpi4")
+    fleet.advance(5.5)
+    assert fleet.epoch == 2
+    fleet.advance(10.0)
+    assert fleet.epoch == 3
+    # leave → return restores the exact membership identity
+    assert fleet.membership_fingerprint() == fp0
+    assert [ep.epoch for ep in seen] == [1, 2, 3]
+    assert seen[0].events == applied
+    # replayability: a fresh controller over the same trace, advanced
+    # through the same instants, re-derives the same epoch history
+    again = FleetController(paper_cluster(), trace)
+    for t in (2.0, 5.5, 10.0):
+        again.advance(t)
+    assert [ep.fingerprint for ep in again.epochs] == \
+        [ep.fingerprint for ep in [fleet.epochs[0]] + seen]
+    # whereas one big advance coalesces the whole (net-zero) trace into
+    # zero epochs — coalescing is per advance call, by design
+    coalesced = FleetController(paper_cluster(), trace)
+    coalesced.advance(10.0)
+    assert coalesced.epoch == 0
+
+
+def test_controller_reelects_fallen_leader_and_forgets_feedback():
+    class SpyLoop:
+        forgotten = []
+
+        def forget_resource(self, node):
+            self.forgotten.append(node)
+            return 1
+
+    cluster = paper_cluster()
+    fleet = FleetController(cluster,
+                            ChurnTrace.scripted([(1.0, "orin_nx", "crash")]),
+                            feedback=SpyLoop())
+    assert fleet.leader == "orin_nx"           # auto-elected at construction
+    fleet.advance(2.0)
+    assert fleet.leader == "tx2"               # first available survivor
+    assert fleet.leader_elections == 1
+    assert SpyLoop.forgotten == ["orin_nx"]
+
+
+def test_controller_noop_epoch_when_events_cancel():
+    """A leave+join of the same node inside one advance window nets out:
+    no membership change, no epoch, no callback."""
+    fired = []
+    fleet = FleetController(
+        paper_cluster(),
+        ChurnTrace.scripted([(1.0, "nano", "leave"), (1.5, "nano", "join")]),
+        on_epoch=lambda ep: fired.append(ep))
+    applied = fleet.advance(2.0)
+    assert len(applied) == 2
+    assert fleet.epoch == 0 and not fired
+
+
+def test_next_failure_peeks_without_consuming():
+    fleet = FleetController(
+        paper_cluster(),
+        ChurnTrace.scripted([(1.0, "nano", "leave"),
+                             (2.0, "tx2", "crash"),
+                             (3.0, "rpi5", "crash")]))
+    # peek ignores non-failures and off-plan nodes, honours the window
+    assert fleet.next_failure(0.0, 5.0, {"tx2"}).time == 2.0
+    assert fleet.next_failure(0.0, 5.0, {"rpi5"}).time == 3.0
+    assert fleet.next_failure(0.0, 1.5, {"tx2", "rpi5"}) is None
+    assert fleet.next_failure(2.0, 5.0, {"tx2"}) is None   # (start, end]
+    # nothing was consumed: the graceful leave still applies at advance
+    assert fleet.advance(1.0)[0].kind == "leave"
+
+
+# --------------------------------------------------------------------------
+# simulator fault injection
+# --------------------------------------------------------------------------
+
+def test_crash_mid_request_retries_to_completion():
+    dag, delta = dag_delta()
+    solo = simulate(paper_cluster(), "hidp", [(0.0, dag, delta)])
+    clean_latency = solo.records[0].latency
+    # crash a mid-tier node well inside the first request's window
+    trace = ChurnTrace.scripted([(clean_latency * 0.4, "tx2", "crash")])
+    fleet = FleetController(paper_cluster(), trace)
+    sim = EdgeSimulator(paper_cluster(), "hidp", fleet=fleet)
+    rep = sim.run([SimRequest(0, dag, 0.0, delta)])
+    r = rep.records[0]
+    assert r.retries == 1
+    assert r.migrations >= 1                    # tx2's shards moved
+    assert r.latency > clean_latency            # the retry costs real time
+    # the casualty executes nothing past the crash instant
+    crash_t = trace.events[0].time
+    assert all(s.end <= crash_t + 1e-12 for s in rep.spans
+               if s.node == "tx2")
+    # survivors carry the retried attempt to completion
+    assert {s.node for s in rep.spans if s.start > crash_t}
+    assert rep.total_retries() == 1 and rep.total_migrations() >= 1
+
+
+def test_leader_crash_reelects_and_completes():
+    dag, delta = dag_delta()
+    solo = simulate(paper_cluster(), "hidp", [(0.0, dag, delta)])
+    trace = ChurnTrace.scripted(
+        [(solo.records[0].latency * 0.5, "orin_nx", "crash")])
+    fleet = FleetController(paper_cluster(), trace)
+    sim = EdgeSimulator(paper_cluster(), "hidp", fleet=fleet)
+    rep = sim.run([SimRequest(0, dag, 0.0, delta)])
+    assert rep.records[0].retries == 1
+    assert sim.leader != "orin_nx"
+    assert sim.leader_elections == 1
+    assert fleet.leader == sim.leader
+    assert all(s.node != "orin_nx" for s in rep.spans
+               if s.start > trace.events[0].time)
+
+
+def test_graceful_leave_never_fails_in_flight_work():
+    """A ``leave`` between requests re-plans the *next* request around the
+    absent node; nothing retries."""
+    dag, delta = dag_delta()
+    trace = ChurnTrace.scripted([(0.01, "tx2", "leave")])
+    fleet = FleetController(paper_cluster(), trace)
+    sim = EdgeSimulator(paper_cluster(), "hidp", fleet=fleet)
+    rep = sim.run([SimRequest(0, dag, 0.0, delta),
+                   SimRequest(1, dag, 5.0, delta)])
+    assert rep.total_retries() == 0
+    # request 0 planned before the leave and may use tx2; request 1 not
+    assert all(s.node != "tx2" for s in rep.spans if s.request_id == 1)
+
+
+def test_slo_accounting_under_churn():
+    dag, delta = dag_delta()
+    solo = simulate(paper_cluster(), "hidp", [(0.0, dag, delta)])
+    slo = solo.records[0].latency * 1.2         # clean run fits, retry won't
+    trace = ChurnTrace.scripted([(slo * 0.5, "tx2", "crash"),
+                                 (30.0, "tx2", "join")])
+    fleet = FleetController(paper_cluster(), trace)
+    sim = EdgeSimulator(paper_cluster(), "hidp", fleet=fleet)
+    rep = sim.run([SimRequest(0, dag, 0.0, delta, slo=slo),
+                   SimRequest(1, dag, 60.0, delta, slo=slo)])
+    assert rep.records[0].slo_violated          # paid a retry
+    assert not rep.records[1].slo_violated      # clean post-churn request
+    assert rep.slo_violations() == 1
+
+
+def test_all_nodes_dead_raises():
+    dag, delta = dag_delta("efficientnet_b0")
+    cluster = paper_cluster(2)
+    trace = ChurnTrace.scripted([(0.05, "orin_nx", "crash"),
+                                 (0.05, "tx2", "crash")])
+    fleet = FleetController(cluster, trace)
+    sim = EdgeSimulator(cluster, "hidp", fleet=fleet)
+    with pytest.raises(RuntimeError, match="every node failed"):
+        sim.run([SimRequest(0, dag, 0.0, delta)])
+
+
+# --------------------------------------------------------------------------
+# churn + membership-keyed cache, end to end
+# --------------------------------------------------------------------------
+
+def make_cache(cluster, fleet):
+    planner = HiDPPlanner(PlannerConfig(
+        objective=Objective("energy", radio_power=4.0)))
+    return PlanCache(planner, cluster, membership_source=fleet)
+
+
+def test_churn_stream_one_replan_per_tenant_per_membership():
+    """The end-to-end gate: a node leaves and returns mid-stream.  Each
+    (tenant, membership) pair pays exactly one frontier pass; the
+    returning membership costs zero DP work."""
+    names = ["resnet152", "vgg19"]
+    dags = {n: EDGE_MODELS[n]() for n in names}
+    cluster = paper_cluster()
+    trace = ChurnTrace.scripted([(2.0, "nano", "leave"),
+                                 (4.0, "nano", "join")])
+    fleet = FleetController(cluster, trace)
+    cache = make_cache(cluster, fleet)
+    sim = EdgeSimulator(cluster, "hidp", plan_cache=cache, fleet=fleet)
+    wl = [SimRequest(i, dags[names[i % 2]], 0.8 * i,
+                     MODEL_DELTA[names[i % 2]]) for i in range(9)]
+    rep = sim.run(wl)
+    assert len(rep.records) == 9 and rep.total_retries() == 0
+    # 2 tenants × 2 distinct memberships (full, no-nano) = 4 passes; the
+    # return to full membership re-serves the original warm fronts
+    assert cache.misses == 4
+    assert cache.hits == len(wl) - 4
+    assert fleet.epoch == 2
+
+
+def test_crash_replan_goes_through_membership_keyed_cache():
+    dag, delta = dag_delta()
+    cluster = paper_cluster()
+    solo = simulate(cluster, "hidp", [(0.0, dag, delta)])
+    trace = ChurnTrace.scripted(
+        [(solo.records[0].latency * 0.4, "tx2", "crash")])
+    fleet = FleetController(cluster, trace)
+    cache = make_cache(cluster, fleet)
+    sim = EdgeSimulator(cluster, "hidp", plan_cache=cache, fleet=fleet)
+    rep = sim.run([SimRequest(i, dag, 3.0 * i, delta) for i in range(3)])
+    assert rep.total_retries() == 1
+    # one pass for the full membership, one for the post-crash membership —
+    # the retry's re-plan IS that second pass (exactly one per tenant per
+    # epoch); both later requests resolve warm against it
+    assert cache.misses == 2
+    assert cache.hits == 2
+    # the post-crash plan books nothing on the casualty
+    post = trace.events[0].time
+    assert all(s.node != "tx2" for s in rep.spans if s.start > post)
+
+
+def test_membership_blind_cache_with_fleet_is_rejected():
+    cluster = paper_cluster()
+    fleet = FleetController(cluster, ChurnTrace())
+    planner = HiDPPlanner(PlannerConfig())
+    blind = PlanCache(planner, cluster)
+    with pytest.raises(ValueError, match="membership"):
+        EdgeSimulator(cluster, "hidp", plan_cache=blind, fleet=fleet)

@@ -1,0 +1,215 @@
+"""Membership-keyed cache identity: leave→return serves the bit-identical
+warm front with zero DP work, and distinct memberships never collide.
+
+The guarantees membership-keyed caching rides on (docs/fleet.md):
+
+* ``membership_fingerprint`` is a pure function of the availability mask —
+  the same nodes away always hash the same (property-tested via hypothesis
+  when installed, and over seeded random masks regardless), and any two
+  distinct masks hash differently;
+* a node leaving is *not* an invalidation: fronts for distinct memberships
+  live side by side, and a leave→return lookup lands back on the original
+  entry — the identical ``ParetoFront`` object, zero additional DP passes;
+* persisted fronts carry their membership, so a restarted process serves
+  *every* membership it ever planned — including degraded ones — warm;
+* ``persist_every`` bounds the damage of a crash to one generation.
+"""
+
+import itertools
+import random
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (Block, HiDPPlanner, ModelDAG, Objective,
+                        PlannerConfig, membership_fingerprint)
+from repro.core.cluster import ClusterManager
+from repro.core.edge_models import battery_cluster, paper_cluster
+from repro.core.objective import METRICS
+from repro.profiling import CalibrationStore
+from repro.serving import PlanCache
+
+
+def toy_dag(name: str, n: int = 5, flops: float = 2e9) -> ModelDAG:
+    blocks = tuple(Block(name=f"{name}{i}", flops=flops, param_bytes=1e6,
+                         bytes_in=4e5, bytes_out=4e5, kind="conv")
+                   for i in range(n))
+    return ModelDAG(name=name, blocks=blocks, input_bytes=4e5,
+                    output_bytes=4e5)
+
+
+def make_cache(cluster, manager, **kwargs) -> PlanCache:
+    planner = HiDPPlanner(PlannerConfig(
+        objective=Objective("energy", radio_power=4.0)))
+    return PlanCache(planner, cluster, membership_source=manager, **kwargs)
+
+
+# --------------------------------------------------------------------------
+# fingerprint identity (property)
+# --------------------------------------------------------------------------
+
+def _mask_fingerprint(cluster, mask):
+    return membership_fingerprint(cluster.with_availability(mask))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.booleans(), min_size=5, max_size=5),
+       st.lists(st.booleans(), min_size=5, max_size=5))
+def test_membership_fingerprint_is_mask_identity(mask_a, mask_b):
+    cluster = paper_cluster()
+    fa = _mask_fingerprint(cluster, mask_a)
+    assert fa == _mask_fingerprint(cluster, list(mask_a))   # pure function
+    assert (fa == _mask_fingerprint(cluster, mask_b)) == (mask_a == mask_b)
+
+
+def test_membership_fingerprints_never_collide_exhaustive():
+    """All 2^5 masks of the paper cluster hash distinctly — the seeded
+    twin of the property test, so the invariant executes everywhere."""
+    cluster = paper_cluster()
+    masks = list(itertools.product([True, False], repeat=5))
+    fps = {_mask_fingerprint(cluster, m) for m in masks}
+    assert len(fps) == len(masks)
+    # and a random replay is stable
+    rng = random.Random(11)
+    for _ in range(20):
+        m = [rng.random() < 0.5 for _ in range(5)]
+        assert _mask_fingerprint(cluster, m) == _mask_fingerprint(cluster, m)
+
+
+def test_membership_is_orthogonal_to_topology():
+    """Availability never leaks into the cluster fingerprint and topology
+    never leaks into the membership fingerprint."""
+    from repro.core import cluster_fingerprint
+
+    full = paper_cluster()
+    degraded = full.with_availability([True, False, True, True, False])
+    assert cluster_fingerprint(full) == cluster_fingerprint(degraded)
+    assert membership_fingerprint(full) != membership_fingerprint(degraded)
+
+
+# --------------------------------------------------------------------------
+# leave → return: zero DP, bit-identical
+# --------------------------------------------------------------------------
+
+def test_leave_return_serves_bit_identical_front_with_zero_dp():
+    cluster = battery_cluster()
+    mgr = ClusterManager(cluster)
+    cache = make_cache(cluster, mgr)
+    dag = toy_dag("a")
+
+    full_front = cache.front(dag)                 # full membership: 1 pass
+    built = {m: cache.get(dag, m) for m in METRICS}
+    assert cache.misses == 1
+
+    mgr.set_available("tx2", False)               # the node leaves
+    away_front = cache.front(dag)                 # degraded membership: pass 2
+    assert cache.misses == 2
+    assert away_front is not full_front
+    assert all(a.node.name != "tx2"
+               for p in away_front
+               for a in p.plan.global_plan.assignments)
+
+    mgr.set_available("tx2", True)                # ... and returns
+    misses = cache.misses
+    back = cache.front(dag)
+    assert cache.misses == misses                 # ZERO DP work
+    assert back is full_front                     # the very same object
+    for m in METRICS:
+        warm = cache.get(dag, m)
+        want = built[m]
+        assert warm.predicted_latency == want.predicted_latency
+        assert warm.predicted_energy == want.predicted_energy
+        assert warm.global_plan.partition == want.global_plan.partition
+        assert warm.local_plans == want.local_plans
+    # and the degraded front is still resident for the next outage
+    mgr.set_available("tx2", False)
+    assert cache.front(dag) is away_front
+    assert cache.misses == misses
+
+
+def test_distinct_memberships_never_collide_in_the_table():
+    """Fronts planned under different masks occupy different keys even for
+    the same tenant and δ — flipping membership can never serve a plan
+    that books a departed node."""
+    cluster = battery_cluster()
+    mgr = ClusterManager(cluster)
+    cache = make_cache(cluster, mgr)
+    dag = toy_dag("a")
+    seen_keys = set()
+    for mask in ([True] * 5, [True, False, True, True, True],
+                 [True, True, False, False, True]):
+        mgr.cluster = cluster.with_availability(mask)
+        key = cache.key(dag)
+        assert key not in seen_keys
+        seen_keys.add(key)
+        cache.front(dag)
+    assert cache.misses == 3 and len(cache) == 3
+
+
+# --------------------------------------------------------------------------
+# persistence: memberships side by side
+# --------------------------------------------------------------------------
+
+def test_persisted_fronts_keep_membership_side_by_side(tmp_path):
+    cluster = battery_cluster()
+    mgr = ClusterManager(cluster)
+    store = CalibrationStore(tmp_path)
+    cache = make_cache(cluster, mgr)
+    dag = toy_dag("a")
+    built_full = {m: cache.get(dag, m) for m in METRICS}
+    mgr.set_available("nano", False)
+    built_away = {m: cache.get(dag, m) for m in METRICS}
+    assert cache.persist(store) == 2              # both memberships written
+
+    # the restarted process starts degraded, then the node returns
+    mgr2 = ClusterManager(cluster.with_availability(
+        [True, True, False, True, True]))
+    fresh = make_cache(cluster, mgr2, store=store)
+    assert fresh.loaded == 2
+    for m in METRICS:                             # degraded membership warm
+        got = fresh.get(dag, m)
+        assert got.predicted_latency == built_away[m].predicted_latency
+        assert got.local_plans == built_away[m].local_plans
+    mgr2.set_available("nano", True)
+    for m in METRICS:                             # full membership warm too
+        got = fresh.get(dag, m)
+        assert got.predicted_latency == built_full[m].predicted_latency
+        assert got.global_plan.partition == \
+            built_full[m].global_plan.partition
+        assert got.local_plans == built_full[m].local_plans
+    assert fresh.misses == 0                      # zero DP work, ever
+
+
+def test_persist_every_autopersists_on_insert(tmp_path):
+    cluster = battery_cluster()
+    mgr = ClusterManager(cluster)
+    store = CalibrationStore(tmp_path)
+    cache = make_cache(cluster, mgr, store=store, persist_every=2)
+    assert not store.fronts_path(cluster).is_file()
+    cache.front(toy_dag("a"))                     # insert 1: below period
+    assert not store.fronts_path(cluster).is_file()
+    cache.front(toy_dag("b", 6))                  # insert 2: flushed
+    assert store.fronts_path(cluster).is_file()
+    assert len(store.load_fronts(cluster)) == 2
+    cache.front(toy_dag("c", 7))                  # insert 3: not yet
+    assert len(store.load_fronts(cluster)) == 2
+    # "a crashed process loses at most one generation": a cold restart
+    # still serves everything the last flush covered
+    fresh = make_cache(cluster, ClusterManager(cluster), store=store)
+    assert fresh.loaded == 2
+    fresh.front(toy_dag("a"))
+    fresh.front(toy_dag("b", 6))
+    assert fresh.misses == 0
+    fresh.front(toy_dag("c", 7))                  # the lost generation
+    assert fresh.misses == 1
+
+
+def test_persist_every_validation():
+    cluster = battery_cluster()
+    planner = HiDPPlanner(PlannerConfig())
+    with pytest.raises(ValueError, match="persist_every"):
+        PlanCache(planner, cluster, persist_every=0,
+                  store=CalibrationStore("/tmp/unused"))
+    with pytest.raises(ValueError, match="store"):
+        PlanCache(planner, cluster, persist_every=2)

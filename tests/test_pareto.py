@@ -274,12 +274,13 @@ def test_cache_serves_mixed_objectives_with_one_dp_pass(warm_cache):
 
 
 def test_cache_key_shape_and_shared_fingerprint(warm_cache):
-    from repro.core import dag_fingerprint
+    from repro.core import dag_fingerprint, membership_fingerprint
 
     cache, cluster = warm_cache
     dag = EDGE_MODELS["resnet152"]()
     key = cache.key(dag, 70.0)
-    assert key == (cluster_fingerprint(cluster), cache.version,
+    assert key == (cluster_fingerprint(cluster),
+                   membership_fingerprint(cluster), cache.version,
                    dag_fingerprint(dag), 70.0)
     # the satellite guarantee: PlanCache keys and CalibrationStore paths
     # hash the cluster through the same helper

@@ -228,6 +228,38 @@ def test_engine_drift_replans_each_tenant_exactly_once(small_lm):
     assert eng.tenant_plans[dag_fingerprint(dag_b)].dag_name == "toy_b"
 
 
+def test_engine_membership_epoch_replans_each_tenant_once(small_lm):
+    """The churn path (docs/fleet.md): a FleetController membership epoch
+    re-enters EXPLORE with exactly one plan resolution per in-flight
+    tenant — a single frontier pass for the never-seen membership, and
+    zero DP work when the departed node returns (the membership key flips
+    back to its original value)."""
+    from repro.core.scheduler import State
+    from repro.fleet import ChurnTrace, FleetController
+
+    cfg, model, params = small_lm
+    cache, dag = _toy_cache()
+    fleet = FleetController(cache.cluster, ChurnTrace.scripted(
+        [(1.0, "tx2", "leave"), (2.0, "tx2", "join")]))
+    cache.membership_source = fleet
+    eng = ServingEngine(model, params, max_batch=2, max_len=32,
+                        plan_cache=cache, default_dag=dag)
+    fleet.on_epoch = lambda ep: eng.on_membership_change(ep)
+    eng.submit(np.asarray([1, 2], np.int32), max_new_tokens=4)
+    assert cache.misses == 1                 # cold pass, full membership
+    fleet.advance(1.5)                       # tx2 leaves → epoch 1
+    assert eng.replans == 1 and State.EXPLORE in eng.trace
+    assert cache.misses == 2                 # one pass for the new mask
+    assert all(a.node.name != "tx2"
+               for a in eng.plan.global_plan.assignments)
+    fleet.advance(2.5)                       # tx2 returns → epoch 2
+    assert eng.replans == 2
+    assert cache.misses == 2                 # warm return: zero DP work
+    assert cache.hits >= 1
+    done = eng.run_until_done()
+    assert len(done) == 1
+
+
 def test_engine_submit_requires_tenant_when_cache_wired(small_lm):
     """A plan_cache without a tenant (no dag= and no default_dag) cannot
     resolve a plan; naming a dag without a cache is equally a wiring
