@@ -3,6 +3,12 @@
 Every benchmark prints ``name,us_per_call,derived`` CSV rows (per the harness
 contract) plus a human-readable table, and returns its raw numbers so
 ``benchmarks/run.py`` can aggregate everything into bench_output.txt.
+
+When ``benchmarks/run.py`` is launched with ``--telemetry-dir`` it installs a
+:class:`repro.telemetry.TelemetryRecorder` as the module-level ``RECORDER``;
+every :func:`emit` then also lands as a ``benchmark.metric`` gauge in the
+run's event log, so the CSV surface and the durable log carry the same
+numbers.
 """
 
 from __future__ import annotations
@@ -16,6 +22,10 @@ from repro.core.edge_models import EDGE_MODELS, MODEL_DELTA, paper_cluster
 STRATS = ("hidp", "disnet", "omniboost", "modnn")
 MODELS = tuple(EDGE_MODELS)
 
+# Set by benchmarks/run.py when --telemetry-dir is given (a
+# repro.telemetry.TelemetryRecorder); None keeps emit() print-only.
+RECORDER = None
+
 
 def timed(fn: Callable, *args, repeat: int = 3) -> tuple[float, object]:
     best, out = float("inf"), None
@@ -28,6 +38,8 @@ def timed(fn: Callable, *args, repeat: int = 3) -> tuple[float, object]:
 
 def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
+    if RECORDER is not None:
+        RECORDER.gauge("benchmark.metric", us, metric=name, derived=derived)
 
 
 def single_request_report(strategy: str, model: str):

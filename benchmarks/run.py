@@ -4,16 +4,24 @@ human-readable tables.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run fig5 fig7  # subset
+
+With ``--telemetry-dir DIR`` the whole run records into a
+``repro.telemetry.RunStore`` under DIR: every ``emit()`` CSV row doubles
+as a ``benchmark.metric`` gauge, every suite gets a ``benchmark.suite``
+wall-clock span, and the run closes with a manifest plus a rendered
+``repro.telemetry.report`` summary.  A telemetry run that records no
+events exits nonzero — the CI smoke gates on that.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 
-def main() -> None:
-    from . import (fig1_partition_sweep, fig5_latency_energy,
+def main(argv: list[str] | None = None) -> int:
+    from . import (common, fig1_partition_sweep, fig5_latency_energy,
                    fig6_gflops_timeline, fig7_throughput_mixes,
                    fig8_node_scaling, roofline, tab1_planner_overhead,
                    tab2_calibration_accuracy)
@@ -28,13 +36,48 @@ def main() -> None:
         "tab2": tab2_calibration_accuracy.main,
         "roofline": roofline.main,
     }
-    picks = sys.argv[1:] or list(suites)
+    parser = argparse.ArgumentParser(
+        prog="benchmarks.run", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    parser.add_argument("suites", nargs="*", choices=[[], *suites],
+                        metavar="suite",
+                        help=f"suites to run (default: all) — "
+                             f"{', '.join(suites)}")
+    parser.add_argument("--telemetry-dir", default=None, metavar="DIR",
+                        help="record the run into a repro.telemetry "
+                             "RunStore under DIR and print its report")
+    args = parser.parse_args(argv)
+    picks = args.suites or list(suites)
+
+    recorder = store = None
+    if args.telemetry_dir:
+        from repro.telemetry import RunStore, TelemetryRecorder
+        from repro.telemetry.report import generate
+        store = RunStore(args.telemetry_dir)
+        recorder = TelemetryRecorder(store.new_run("bench"), store=store)
+        common.RECORDER = recorder
+        print(f"telemetry: recording run {recorder.run} under {store.root}")
+
     t0 = time.time()
     for name in picks:
         print(f"\n{'=' * 72}\n# {name}\n{'=' * 72}")
-        suites[name]()
+        if recorder is not None:
+            with recorder.timed("benchmark.suite", suite=name):
+                suites[name]()
+        else:
+            suites[name]()
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+    if recorder is not None:
+        common.RECORDER = None
+        recorder.close(suites=",".join(picks))
+        try:
+            print(f"\n{generate(store, recorder.run)}")
+        except ValueError as e:
+            print(f"telemetry report failed: {e}", file=sys.stderr)
+            return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -109,7 +109,11 @@ class SimReport:
     def predicted_energies(self) -> dict[str, float]:
         """Planner-predicted per-request energy, normalized like
         :meth:`energies` (plan energy + cluster idle over the predicted
-        latency window) so the two are directly comparable."""
+        latency window) so the two are directly comparable.  Empty dict
+        for a run with zero completed requests (aggressive churn traces
+        can drain a workload to nothing)."""
+        if not self.records:
+            return {}
         idle_w = self._idle_watts()
         out: dict[str, list[float]] = {}
         for r in self.records:
@@ -124,7 +128,10 @@ class SimReport:
         energy counts participating-node idle inside its own window; the
         measured side meters the whole cluster) but near zero whenever
         execution matches the cost model, and large when the hardware
-        diverges."""
+        diverges.  Empty dict — never a raise, never a fake 0-error
+        claim — when the run completed zero requests."""
+        if not self.records:
+            return {}
         idle_w = self._idle_watts()
         lat_errs, en_errs = [], []
         for r in self.records:
@@ -214,14 +221,32 @@ class EdgeSimulator:
     (``membership_source=fleet``): each new membership costs one frontier
     pass per tenant and a *returning* membership serves warm.  Feedback
     observations from shards that completed before a crash are kept — the
-    hardware really did execute them."""
+    hardware really did execute them.
+
+    ``telemetry`` (a ``repro.telemetry.TelemetryRecorder``) makes the run
+    durable: per-request and per-attempt spans (including fault-injection
+    retries), retry/migration/SLO counters stamped with the membership
+    epoch in effect, and the logical clock advanced with simulated time so
+    every other instrumented subsystem (cache, fleet, feedback) timestamps
+    consistently.  A disabled recorder is normalized away — the hot path
+    pays a single ``is not None`` check (see docs/observability.md).
+
+    ``planning_time`` controls how planner overhead enters *simulated*
+    time: the default ``"wall"`` charges each attempt's measured
+    ``planning_seconds`` (the paper-faithful accounting — DP overhead
+    delays execution, which tab1 measures), while a float pins a fixed
+    per-attempt overhead instead.  Pass ``planning_time=0.0`` for
+    seeded-replay determinism: wall clocks are the only nondeterminism in
+    the pipeline, so pinning this makes two replays byte-identical
+    (telemetry's canonical-log contract is gated on exactly that)."""
 
     def __init__(self, cluster: Cluster, strategy: str | Strategy = "hidp",
                  leader: str | None = None,
                  provider: CostProvider | None = None,
                  ground_truth=None, feedback=None,
                  objective: Objective | None = None,
-                 plan_cache=None, fleet=None):
+                 plan_cache=None, fleet=None, telemetry=None,
+                 planning_time: float | str = "wall"):
         if fleet is not None and plan_cache is not None:
             ms = plan_cache.membership_source
             if not (ms is fleet or ms is fleet.manager):
@@ -256,6 +281,13 @@ class EdgeSimulator:
         self.feedback = feedback
         self.objective = objective
         self.plan_cache = plan_cache
+        if planning_time != "wall":
+            planning_time = float(planning_time)
+            if planning_time < 0:
+                raise ValueError("planning_time must be 'wall' or >= 0")
+        self.planning_time = planning_time
+        from repro.telemetry import active as _tel_active
+        self.telemetry = _tel_active(telemetry)
         self.leader_elections = 0
         # capacity-1 resources
         self.proc_busy: dict[tuple[str, str], float] = {}
@@ -453,8 +485,16 @@ class EdgeSimulator:
             self.leader = leader
             self.leader_elections += 1
 
+    def _epoch(self) -> int | None:
+        """The membership epoch in effect (None for a static fleet) —
+        what telemetry events are stamped with."""
+        return self.fleet.epoch if self.fleet is not None else None
+
     def _run_request(self, req: SimRequest) -> RequestRecord:
         objective = req.objective or self.objective
+        tel = self.telemetry
+        if tel is not None:
+            tel.advance(req.arrival)
         if self.fleet is not None:
             # graceful events (leave/join/battery/thermal) land at the
             # planning boundary; crashes are handled mid-request below
@@ -466,8 +506,10 @@ class EdgeSimulator:
         while True:
             plan = self._plan_for(req, objective)
             snap = self._snapshot()
-            t, energy = self._execute_plan(req, plan,
-                                           start + plan.planning_seconds)
+            overhead = (plan.planning_seconds
+                        if self.planning_time == "wall"
+                        else self.planning_time)
+            t, energy = self._execute_plan(req, plan, start + overhead)
             crash = None
             if self.fleet is not None:
                 used = {a.node.name for a in plan.global_plan.assignments}
@@ -476,6 +518,11 @@ class EdgeSimulator:
             if crash is None:
                 total_energy += energy
                 self._flush_observations()
+                if tel is not None:
+                    tel.advance(t)
+                    tel.span("sim.attempt", t - start, t=start,
+                             tenant=req.dag.name, epoch=self._epoch(),
+                             request=req.request_id, ok=True)
                 break
             # mid-request failure: truncate the doomed attempt, consume the
             # trace through the crash (one coalesced membership epoch),
@@ -485,25 +532,52 @@ class EdgeSimulator:
             self._flush_observations(up_to=crash.time)
             total_energy += self._rollback_to_crash(snap, crash.time)
             self.fleet.advance(crash.time)
-            migrations += sum(
+            migrated = sum(
                 1 for a in plan.global_plan.assignments
                 if not self.fleet.manager.node(a.node.name).available)
+            migrations += migrated
             retries += 1
             self._sync_leader()
+            if tel is not None:
+                tel.advance(crash.time)
+                tel.span("sim.attempt", crash.time - start, t=start,
+                         tenant=req.dag.name, epoch=self._epoch(),
+                         request=req.request_id, ok=False, crashed=crash.node)
+                tel.counter("sim.retry", t=crash.time, tenant=req.dag.name,
+                            epoch=self._epoch(), request=req.request_id,
+                            crashed=crash.node)
+                if migrated:
+                    tel.counter("sim.migration", migrated, t=crash.time,
+                                tenant=req.dag.name, epoch=self._epoch(),
+                                request=req.request_id)
             if self.fleet.manager.first_available() is None:
                 raise RuntimeError(
                     f"request {req.request_id}: every node failed; nothing "
                     "left to retry on")
             start = crash.time
-        return RequestRecord(request_id=req.request_id,
-                             dag_name=req.dag.name,
-                             arrival=req.arrival, completion=t,
-                             active_energy=total_energy,
-                             mode=plan.global_plan.mode,
-                             predicted_latency=plan.predicted_latency,
-                             predicted_energy=plan.predicted_energy,
-                             retries=retries, migrations=migrations,
-                             slo=req.slo)
+        rec = RequestRecord(request_id=req.request_id,
+                            dag_name=req.dag.name,
+                            arrival=req.arrival, completion=t,
+                            active_energy=total_energy,
+                            mode=plan.global_plan.mode,
+                            predicted_latency=plan.predicted_latency,
+                            predicted_energy=plan.predicted_energy,
+                            retries=retries, migrations=migrations,
+                            slo=req.slo)
+        if tel is not None:
+            tel.span("sim.request", rec.latency, t=req.arrival,
+                     tenant=req.dag.name, epoch=self._epoch(),
+                     request=req.request_id, mode=rec.mode,
+                     retries=retries, migrations=migrations,
+                     slo_violated=rec.slo_violated,
+                     active_energy_j=rec.active_energy,
+                     predicted_latency_s=rec.predicted_latency,
+                     predicted_energy_j=rec.predicted_energy)
+            if rec.slo_violated:
+                tel.counter("sim.slo_violation", t=rec.completion,
+                            tenant=req.dag.name, epoch=self._epoch(),
+                            request=req.request_id)
+        return rec
 
     def _execute_plan(self, req: SimRequest, plan: HiDPPlan,
                       t: float) -> tuple[float, float]:
@@ -574,11 +648,13 @@ def simulate(cluster: Cluster, strategy: str | Strategy,
              *, provider: CostProvider | None = None,
              ground_truth=None, feedback=None,
              objective: Objective | None = None,
-             plan_cache=None, fleet=None) -> SimReport:
+             plan_cache=None, fleet=None, telemetry=None,
+             planning_time: float | str = "wall") -> SimReport:
     sim = EdgeSimulator(cluster, strategy, provider=provider,
                         ground_truth=ground_truth, feedback=feedback,
                         objective=objective, plan_cache=plan_cache,
-                        fleet=fleet)
+                        fleet=fleet, telemetry=telemetry,
+                        planning_time=planning_time)
     reqs = [SimRequest(i, dag, t, delta)
             for i, (t, dag, delta) in enumerate(workload)]
     return sim.run(reqs)

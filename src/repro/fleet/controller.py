@@ -73,18 +73,24 @@ class FleetController:
         epoch: the current epoch number (0 = the initial membership).
         epochs: full epoch history, ``epochs[-1]`` current.
         leader_elections: leader hand-offs forced by churn.
+        telemetry: optional ``repro.telemetry.TelemetryRecorder`` — every
+            closed epoch lands as a ``fleet.membership`` gauge (value =
+            available-node count) and every forced hand-off as a
+            ``fleet.leader_election`` counter.
     """
 
     def __init__(self, cluster: Cluster | ClusterManager,
                  trace: ChurnTrace | None = None, *,
                  leader: str | None = None,
                  on_epoch: Callable[[MembershipEpoch], object] | None = None,
-                 feedback=None):
+                 feedback=None, telemetry=None):
         self.manager = (cluster if isinstance(cluster, ClusterManager)
                         else ClusterManager(cluster))
         self.trace = trace if trace is not None else ChurnTrace()
         self.on_epoch = on_epoch
         self.feedback = feedback
+        from repro.telemetry import active as _tel_active
+        self.telemetry = _tel_active(telemetry)
         self.leader_elections = 0
         self._cursor = 0
         self.now = 0.0
@@ -164,6 +170,12 @@ class FleetController:
                              leader=self.manager.leader,
                              events=tuple(applied))
         self.epochs.append(ep)
+        if self.telemetry is not None:
+            self.telemetry.gauge(
+                "fleet.membership", float(ep.available()), t=ep.time,
+                epoch=ep.epoch, fingerprint=ep.fingerprint[:12],
+                leader=ep.leader or "",
+                events=",".join(e.kind for e in ep.events))
         if self.on_epoch is not None:
             self.on_epoch(ep)
 
@@ -174,6 +186,11 @@ class FleetController:
         name = self.manager.ensure_leader()
         if count and name != before:
             self.leader_elections += 1
+            if self.telemetry is not None:
+                self.telemetry.counter(
+                    "fleet.leader_election", t=self.now,
+                    epoch=self.epochs[-1].epoch if self.epochs else 0,
+                    previous=before or "", leader=name or "")
         return name
 
     def elect_leader(self, preferred: str | None = None) -> str:

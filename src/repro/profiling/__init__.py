@@ -16,8 +16,8 @@ docs/energy.md for the energy objective built on the fitted predictors.
 """
 
 from .learned import LearnedCostModel, Sample  # noqa: F401
-from .profiler import (Profiler, SyntheticGroundTruth,  # noqa: F401
-                       block_traffic)
+from .profiler import (DEFAULT_KERNEL_SHAPES, Profiler,  # noqa: F401
+                       SyntheticGroundTruth, block_traffic)
 from .provider import CalibratedCostProvider  # noqa: F401
 from .store import CalibrationStore  # noqa: F401
 from .feedback import DriftEvent, FeedbackLoop  # noqa: F401
@@ -32,3 +32,43 @@ def calibrate(cluster, dags, deltas, *, ground_truth=None,
                                    ground_truth=ground_truth)
     model = LearnedCostModel.fit(samples, mode=mode)
     return CalibratedCostProvider(model)
+
+
+def calibrate_kernels(store: "CalibrationStore", cluster, *,
+                      shapes=None, kinds=None, devices=None,
+                      profiler: "Profiler | None" = None,
+                      telemetry=None, mode: str = "linear",
+                      note: str = "real-kernel sweep"
+                      ) -> tuple["LearnedCostModel", int]:
+    """Close the real-hardware calibration loop in one call: sweep the
+    FULL ``repro.kernels`` set through :meth:`Profiler.profile_kernels`
+    on **every visible jax device** (per-device Sample keys; pass
+    ``devices=`` to restrict the sweep), fit a :class:`LearnedCostModel`
+    from the pooled measurements, and persist it through ``store`` for
+    ``cluster``.  Returns ``(model, version)`` — the saved
+    ``CalibrationStore`` version a ``PlanCache`` keys on.
+
+    With ``telemetry`` each measured point lands as a ``profile.kernel``
+    span and the save as a ``profile.calibration`` counter (attrs:
+    version, devices, samples).
+    """
+    import jax
+
+    from repro.telemetry import active as _tel_active
+
+    tel = _tel_active(telemetry)
+    prof = profiler or Profiler()
+    devices = list(devices) if devices is not None else jax.devices()
+    samples: list[Sample] = []
+    for dev in devices:
+        samples.extend(prof.profile_kernels(
+            shapes=shapes, kinds=kinds, device=dev,
+            key=f"{dev.platform}:{dev.id}" if len(devices) > 1 else None,
+            telemetry=telemetry))
+    model = LearnedCostModel.fit(samples, mode=mode)
+    version = store.save(cluster, model, note=note)
+    if tel is not None:
+        tel.counter("profile.calibration", version=version,
+                    devices=len(devices), samples=len(samples),
+                    note=note)
+    return model, version

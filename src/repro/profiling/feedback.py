@@ -29,6 +29,9 @@ When a resource crosses ``threshold`` on either statistic, the loop
   5. resets the drift windows so the refitted model gets a clean slate.
 
 A drift event therefore costs one re-plan, not one per observation.
+With a ``telemetry=`` recorder wired, every trip also lands as a
+``feedback.drift`` gauge (value = the drift magnitude, attrs = metric,
+resource, new calibration version) — see docs/observability.md.
 """
 
 from __future__ import annotations
@@ -55,8 +58,11 @@ class FeedbackLoop:
                  min_observations: int = 3,
                  buffer_size: int = 64,
                  on_drift: Callable[[], object] | None = None,
-                 calibration_version: int = 0):
+                 calibration_version: int = 0,
+                 telemetry=None):
         self.model = model
+        from repro.telemetry import active as _tel_active
+        self.telemetry = _tel_active(telemetry)
         self.threshold = threshold
         self.alpha = alpha
         self.min_observations = min_observations
@@ -168,6 +174,11 @@ class FeedbackLoop:
         self.replans += 1
         self.calibration_version += 1      # stale plan fronts die here
         self.events.append(DriftEvent(self.observations, drift_now, metric))
+        if self.telemetry is not None:
+            self.telemetry.gauge(
+                "feedback.drift", float(drift_now), metric=metric,
+                resource=key, calibration_version=self.calibration_version,
+                at_observation=self.observations)
         self._errors.clear()          # fresh slate for the refitted model
         self._energy_errors.clear()
         if self.on_drift is not None:

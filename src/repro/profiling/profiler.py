@@ -10,9 +10,12 @@ Two measurement paths:
   means — the shape of real profiling without real hardware.
 
 * ``profile_kernels`` wall-clock times the actual jax kernels in
-  ``repro.kernels`` (blocked/Pallas-interpret lowering on CPU), producing
-  real timing samples for the host — the path a physical deployment extends
-  per device.
+  ``repro.kernels`` — the FULL set (prefill flash attention, decode
+  attention, Mamba-2 SSD; blocked/Pallas-interpret lowering on CPU) —
+  per device, with per-kind shape sweeps (``DEFAULT_KERNEL_SHAPES``).
+  ``repro.profiling.calibrate_kernels`` loops it over every visible jax
+  device, fits a ``LearnedCostModel`` and persists it through the
+  ``CalibrationStore`` — the real-hardware calibration loop.
 
 Both produce ``learned.Sample`` rows that ``LearnedCostModel.fit`` consumes.
 """
@@ -122,6 +125,19 @@ class SyntheticGroundTruth:
 # Profiler
 # --------------------------------------------------------------------------
 
+# Default shape sweep for the real-kernel path, per kernel kind.  Small by
+# design (CI runs these under Pallas-interpret on CPU); a hardware
+# deployment passes its own per-device shapes to ``profile_kernels``.
+DEFAULT_KERNEL_SHAPES: dict[str, tuple[tuple[int, ...], ...]] = {
+    # (B, T, H, D) — prefill flash attention
+    "attn": ((1, 64, 4, 32), (1, 128, 4, 32), (2, 128, 4, 32)),
+    # (B, S, H, D) — one decode token against an S-long KV cache
+    "decode": ((1, 128, 4, 32), (2, 128, 4, 32), (2, 256, 4, 32)),
+    # (B, T, NH, HD, N) — Mamba-2 chunked SSD scan
+    "ssd": ((1, 64, 4, 32, 16), (1, 128, 4, 32, 16), (2, 128, 4, 32, 16)),
+}
+
+
 @dataclasses.dataclass
 class Profiler:
     """Micro-benchmark driver: warmup, repeats, trimmed mean, fixed seed."""
@@ -173,25 +189,53 @@ class Profiler:
         return samples
 
     # ------------------------------------------------------- real kernels
-    def profile_kernels(self, *, block_q: int = 32,
-                        block_k: int = 32) -> list[Sample]:
-        """Wall-clock the repro.kernels attention/SSD ops on the host.
+    def profile_kernels(self, *, kinds: Sequence[str] | None = None,
+                        shapes: Mapping[str, Sequence[tuple[int, ...]]]
+                        | None = None,
+                        block_q: int = 32, block_k: int = 32,
+                        device=None, key: str | None = None,
+                        telemetry=None) -> list[Sample]:
+        """Wall-clock the FULL repro.kernels set on one device: prefill
+        flash attention, single-token decode attention against a KV cache,
+        and the Mamba-2 chunked SSD scan.
 
-        Small shapes by design: this demonstrates the real-measurement path
-        (warmup → repeats → trimmed mean) with the same Sample output as the
-        synthetic path; a hardware deployment would sweep real shapes.
+        ``shapes`` maps kernel kind → shape tuples (see
+        ``DEFAULT_KERNEL_SHAPES`` for the per-kind layout); ``kinds``
+        restricts the sweep.  ``device`` (a ``jax.Device``) places every
+        input there before timing — the per-device path a hardware
+        deployment loops over — and ``key`` overrides the Sample key
+        (default ``host/<backend>`` for the host, ``<platform>:<id>`` for
+        an explicit device).  With ``telemetry`` each measured point also
+        lands as a ``profile.kernel`` span whose wall_s is the trimmed-mean
+        latency.  Same discipline as the synthetic path throughout: warmup
+        → repeats → trimmed mean, seeded inputs.
         """
         import jax
         import jax.numpy as jnp
 
         from repro.kernels import ops
+        from repro.telemetry import active as _tel_active
 
-        backend = jax.default_backend()
-        key = f"host/{backend}"
+        tel = _tel_active(telemetry)
+        if key is None:
+            key = (f"host/{jax.default_backend()}" if device is None
+                   else f"{device.platform}:{device.id}")
+        table = dict(DEFAULT_KERNEL_SHAPES)
+        if shapes:
+            table.update(shapes)
+        sweep = tuple(kinds) if kinds is not None else tuple(table)
+        unknown = [k for k in sweep if k not in table]
+        if unknown:
+            raise KeyError(f"unknown kernel kinds {unknown}; "
+                           f"known: {sorted(table)}")
         samples: list[Sample] = []
         rng = jax.random.PRNGKey(self.seed)
 
+        def put(x):
+            return jax.device_put(x, device) if device is not None else x
+
         def bench(fn, *args) -> float:
+            args = tuple(put(a) for a in args)
             for _ in range(self.warmup):
                 jax.block_until_ready(fn(*args))
             reps = []
@@ -201,15 +245,51 @@ class Profiler:
                 reps.append(time.perf_counter() - t0)
             return self._trimmed_mean(reps)
 
-        for b, t, h, d in ((1, 64, 4, 32), (1, 128, 4, 32), (2, 128, 4, 32)):
-            ks = jax.random.split(rng, 3)
-            q = jax.random.normal(ks[0], (b, t, h, d), jnp.float32)
-            k = jax.random.normal(ks[1], (b, t, h, d), jnp.float32)
-            v = jax.random.normal(ks[2], (b, t, h, d), jnp.float32)
-            lat = bench(lambda q, k, v: ops.flash_attention(
-                q, k, v, block_q=block_q, block_k=block_k), q, k, v)
-            flops = 4.0 * b * t * t * h * d        # QK^T + AV
-            traffic = 4.0 * (q.size + k.size + v.size + q.size)
-            samples.append(Sample(key=key, kind="attn", work=flops,
+        def record(kind: str, shape: tuple[int, ...], flops: float,
+                   traffic: float, lat: float) -> None:
+            samples.append(Sample(key=key, kind=kind, work=flops,
                                   traffic=traffic, latency_s=lat))
+            if tel is not None:
+                tel.span("profile.kernel", 0.0, wall_s=lat, kind=kind,
+                         key=key, shape="x".join(map(str, shape)),
+                         flops=flops)
+
+        for kind in sweep:
+            for shape in table[kind]:
+                if kind == "attn":
+                    b, t, h, d = shape
+                    ks = jax.random.split(rng, 3)
+                    q = jax.random.normal(ks[0], (b, t, h, d), jnp.float32)
+                    k = jax.random.normal(ks[1], (b, t, h, d), jnp.float32)
+                    v = jax.random.normal(ks[2], (b, t, h, d), jnp.float32)
+                    lat = bench(lambda q, k, v: ops.flash_attention(
+                        q, k, v, block_q=block_q, block_k=block_k), q, k, v)
+                    flops = 4.0 * b * t * t * h * d       # QK^T + AV
+                    traffic = 4.0 * (q.size + k.size + v.size + q.size)
+                elif kind == "decode":
+                    b, s, h, d = shape
+                    ks = jax.random.split(rng, 3)
+                    q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+                    kc = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+                    vc = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+                    lengths = jnp.full((b,), s, jnp.int32)
+                    lat = bench(lambda q, kc, vc, ln: ops.decode_attention(
+                        q, kc, vc, ln, block_k=block_k), q, kc, vc, lengths)
+                    flops = 4.0 * b * s * h * d           # qK^T + aV
+                    traffic = 4.0 * (q.size + kc.size + vc.size + q.size)
+                else:                                     # ssd
+                    b, t, nh, hd, n = shape
+                    ks = jax.random.split(rng, 4)
+                    x = jax.random.normal(ks[0], (b, t, nh, hd), jnp.float32)
+                    dt = jax.random.uniform(ks[1], (b, t, nh), jnp.float32,
+                                            0.001, 0.1)
+                    A = -jnp.ones((nh,), jnp.float32)
+                    B = jax.random.normal(ks[2], (b, t, n), jnp.float32)
+                    C = jax.random.normal(ks[3], (b, t, n), jnp.float32)
+                    D = jnp.ones((nh,), jnp.float32)
+                    lat = bench(lambda x, dt, B, C: ops.ssd(
+                        x, dt, A, B, C, D, chunk=min(64, t)), x, dt, B, C)
+                    flops = 6.0 * b * t * nh * hd * n     # in/out proj + scan
+                    traffic = 4.0 * (x.size + B.size + C.size + x.size)
+                record(kind, shape, flops, traffic, lat)
         return samples

@@ -6,6 +6,14 @@ probing the cluster (Alg. 1 line 3) — producing a new ShardingPlan for the
 surviving mesh.  Parameters are resharded by round-tripping through the new
 NamedShardings (jax handles device-to-device movement); training resumes
 from the last checkpoint when the mesh change invalidates live buffers.
+
+:meth:`ElasticController.on_epoch` closes the loop with the fleet layer:
+wire it as (or from) a ``repro.fleet.FleetController``'s ``on_epoch``
+callback and every membership epoch — a simulated edge node leaving, or a
+real pod dropping out — resizes the elastic world to the epoch's
+available-node count.  With a ``telemetry=`` recorder the controller emits
+an ``elastic.world`` gauge per epoch and an ``elastic.replan`` counter per
+actual re-plan (see docs/observability.md).
 """
 
 from __future__ import annotations
@@ -24,6 +32,11 @@ class ElasticController:
     base_mesh: MeshDesc
     current_plan: ShardingPlan | None = None
     replans: int = 0
+    telemetry: object = None
+
+    def __post_init__(self):
+        from repro.telemetry import active as _tel_active
+        self.telemetry = _tel_active(self.telemetry)
 
     def initial_plan(self) -> ShardingPlan:
         self.current_plan = plan_tpu(self.model, self.shape, self.base_mesh)
@@ -52,8 +65,27 @@ class ElasticController:
                 and mesh == self.current_plan.mesh):
             return self.current_plan
         self.replans += 1
+        if self.telemetry is not None:
+            self.telemetry.counter("elastic.replan", reason="availability",
+                                   pods=available_pods,
+                                   mesh="x".join(map(str, mesh.shape)))
         self.current_plan = plan_tpu(self.model, self.shape, mesh)
         return self.current_plan
+
+    def on_epoch(self, epoch) -> ShardingPlan:
+        """Membership-epoch adapter: wire this as (or from) a
+        ``repro.fleet.FleetController.on_epoch`` callback.  The epoch's
+        available-node count becomes the elastic world size — a departed
+        node shrinks the mesh, a returned one grows it back — and the
+        transition lands as an ``elastic.world`` gauge."""
+        world = int(epoch.available())
+        if self.telemetry is not None:
+            self.telemetry.gauge(
+                "elastic.world", float(world),
+                t=getattr(epoch, "time", None) or 0.0,
+                epoch=getattr(epoch, "epoch", None),
+                fingerprint=getattr(epoch, "fingerprint", "")[:12])
+        return self.on_availability_change(world)
 
     def on_drift(self) -> ShardingPlan:
         """Re-enter EXPLORE because the cost model drifted, not because the
@@ -63,5 +95,8 @@ class ElasticController:
         mesh = (self.current_plan.mesh if self.current_plan is not None
                 else self.base_mesh)
         self.replans += 1
+        if self.telemetry is not None:
+            self.telemetry.counter("elastic.replan", reason="drift",
+                                   mesh="x".join(map(str, mesh.shape)))
         self.current_plan = plan_tpu(self.model, self.shape, mesh)
         return self.current_plan

@@ -84,12 +84,17 @@ class ServingEngine:
     controller as its ``membership_source``: every membership epoch then
     re-enters EXPLORE with one plan resolution per in-flight tenant — a
     single frontier pass for a never-seen membership, a pure warm hit for
-    a returning one (see docs/fleet.md)."""
+    a returning one (see docs/fleet.md).
+
+    ``telemetry`` (a ``repro.telemetry.TelemetryRecorder``) records every
+    submit's per-tenant cache resolution (hit | miss | none) and every
+    EXPLORE re-entry (drift or membership epoch) as structured counters —
+    see docs/observability.md."""
 
     def __init__(self, model: Model, params: dict, *, max_batch: int = 4,
                  max_len: int = 128, plan=None, donate: bool = True,
                  feedback=None, on_replan: Callable[[], Any] | None = None,
-                 plan_cache=None, default_dag=None):
+                 plan_cache=None, default_dag=None, telemetry=None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -97,6 +102,8 @@ class ServingEngine:
         self.plan = plan
         self.feedback = feedback
         self.on_replan = on_replan
+        from repro.telemetry import active as _tel_active
+        self.telemetry = _tel_active(telemetry)
         if plan_cache is None and default_dag is not None:
             raise ValueError(
                 "default_dag names the tenant submits resolve against a "
@@ -153,11 +160,23 @@ class ServingEngine:
                 raise ValueError(
                     "a plan_cache is wired but this submit names no "
                     "tenant: pass dag= here or default_dag= to the engine")
+            misses0 = self.plan_cache.misses
             self.plan = self.plan_cache.get(dag, objective=objective,
                                             delta=delta)
             fp = dag_fingerprint(dag)
             self.tenant_plans[fp] = self.plan
             self._tenant_deltas[fp] = delta
+            if self.telemetry is not None:
+                # per-tenant cache resolution: was this submit served off
+                # the warm front, or did it pay the tenant's DP pass?
+                self.telemetry.counter(
+                    "engine.submit", tenant=dag.name, request=rid,
+                    objective=objective,
+                    resolved="miss" if self.plan_cache.misses > misses0
+                    else "hit")
+        elif self.telemetry is not None:
+            self.telemetry.counter("engine.submit", request=rid,
+                                   objective=objective, resolved="none")
         self.queue.append(Request(rid, np.asarray(prompt, np.int32),
                                   max_new_tokens, eos_id,
                                   objective=objective, dag=dag))
@@ -236,6 +255,11 @@ class ServingEngine:
         self.state = State.EXPLORE
         self.trace.append(self.state)
         self.replans += 1
+        if self.telemetry is not None:
+            self.telemetry.counter(
+                "engine.replan", reason="epoch",
+                epoch=getattr(epoch, "epoch", None),
+                tenants=len(self._tenant_traffic()))
         if self.plan_cache is not None:
             self._replan_in_flight_tenants()
         if self.on_replan is not None:
@@ -340,6 +364,10 @@ class ServingEngine:
                 self.state = State.EXPLORE
                 self.trace.append(self.state)
                 self.replans += 1
+                if self.telemetry is not None:
+                    self.telemetry.counter(
+                        "engine.replan", reason="drift",
+                        tenants=len(self._tenant_traffic()))
                 if self.plan_cache is not None:
                     # the drift already bumped the calibration version (via
                     # version_source or this on_drift); re-plan exactly

@@ -182,16 +182,23 @@ class PlanCache:
         hits / misses / evictions / invalidations / loaded: lifetime
             counters; ``misses`` counts EXPLORE re-plans (full frontier
             passes), ``loaded`` counts fronts served warm from a store.
+        telemetry: optional ``repro.telemetry.TelemetryRecorder`` — every
+            hit/miss/eviction/invalidation/persist becomes a per-tenant
+            counter and each DP frontier pass a wall-timed
+            ``plan.frontier_pass`` span (docs/observability.md).
     """
 
     def __init__(self, planner: HiDPPlanner, cluster: Cluster, *,
                  version: int = 0, version_source=None,
                  eviction: LRUEviction | None = None, store=None,
-                 membership_source=None, persist_every: int | None = None):
+                 membership_source=None, persist_every: int | None = None,
+                 telemetry=None):
         self.planner = planner
         self.cluster = cluster
         self.fingerprint = cluster_fingerprint(cluster)
         self.eviction = eviction
+        from repro.telemetry import active as _tel_active
+        self.telemetry = _tel_active(telemetry)
         self._store = store
         self._version_source = version_source
         self.membership_source = membership_source
@@ -260,6 +267,9 @@ class PlanCache:
             entries = OrderedDict()
             self._generation = (version, entries)
             self.invalidations += 1
+            if self.telemetry is not None:
+                self.telemetry.counter("plan_cache.invalidation",
+                                       version=version)
         return entries
 
     def front(self, dag: ModelDAG, delta: float | None = None) -> ParetoFront:
@@ -272,14 +282,28 @@ class PlanCache:
         key = self.key(dag, delta)
         entries = self._table(key[2])
         entry = entries.get(key)
+        tel = self.telemetry
         if entry is not None:
             self.hits += 1
             entries.move_to_end(key)
+            if tel is not None:
+                tel.counter("plan_cache.hit", tenant=dag.name,
+                            dag_fp=key[3][:12])
             return entry.front
         self.misses += 1
         if delta is None:
             delta = self.planner.config.delta
+        if tel is not None:
+            tel.counter("plan_cache.miss", tenant=dag.name,
+                        dag_fp=key[3][:12])
+        t0 = time.perf_counter()
         front = self.planner.at_delta(delta).front(dag, self.live_cluster())
+        if tel is not None:
+            # the DP frontier pass — the EXPLORE cost the cache amortizes;
+            # its duration is wall-measured, so it rides the wall_s field
+            tel.span("plan.frontier_pass", 0.0, tenant=dag.name,
+                     wall_s=time.perf_counter() - t0, dag_fp=key[3][:12],
+                     membership=key[1][:12], version=key[2])
         entries[key] = CacheEntry(dag_name=dag.name,
                                   dag_fingerprint=key[3], delta=delta,
                                   front=front,
@@ -314,6 +338,10 @@ class PlanCache:
         if self.eviction is None:
             return
         for key in self.eviction.victims(entries, protect):
+            if self.telemetry is not None:
+                self.telemetry.counter("plan_cache.eviction",
+                                       tenant=entries[key].dag_name,
+                                       dag_fp=key[3][:12])
             del entries[key]
             self.evictions += 1
 
@@ -330,6 +358,8 @@ class PlanCache:
         new = self._generation[0] + 1 if version is None else int(version)
         self._generation = (new, OrderedDict())
         self.invalidations += 1
+        if self.telemetry is not None:
+            self.telemetry.counter("plan_cache.invalidation", version=new)
         return new
 
     def on_drift(self) -> None:
@@ -373,7 +403,11 @@ class PlanCache:
             for e in entries.values()
         ]
         self._inserts_since_persist = 0
-        return store.save_fronts(self.cluster, payload)
+        n = store.save_fronts(self.cluster, payload)
+        if self.telemetry is not None:
+            self.telemetry.counter("plan_cache.persist", n,
+                                   version=version)
+        return n
 
     def warm_from(self, store=None) -> int:
         """Load persisted fronts into the current generation, skipping the

@@ -1,0 +1,165 @@
+"""TelemetryRecorder — the one emission point every subsystem shares.
+
+A recorder is cheap enough to thread through hot paths: emission is a
+dataclass construction and a list append; a *disabled* recorder
+(``enabled=False``) is indistinguishable from no recorder at all, because
+instrumented classes normalize it to ``None`` via :func:`active` at
+construction time — the hot path then pays exactly one ``is not None``
+check, which is why the fig7 overhead gate holds the disabled path to a
+≤2 % regression.
+
+Ordering is deterministic: every event gets the recorder's next ``seq``,
+and logical time comes from the recorder's :attr:`clock`, which the
+simulator advances as simulated time passes (subsystems with no time of
+their own — the plan cache, the feedback loop — stamp events with the
+clock as-is).  Wall-clock facts are confined to the schema's designated
+``wall``/``wall_s`` fields, so seeded replays stay byte-identical modulo
+those fields (see :mod:`repro.telemetry.events`).
+
+Lifecycle::
+
+    store = RunStore("artifacts/telemetry")
+    tel = TelemetryRecorder(store.new_run("churn"), store=store)
+    ... thread tel through EdgeSimulator / PlanCache / FleetController ...
+    tel.close(cluster_fingerprint=...)     # flush events + write manifest
+
+``flush_every=N`` bounds the in-memory buffer for long runs; ``close``
+always flushes the tail and stamps the manifest with per-kind counts.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Iterator
+
+from .events import TelemetryEvent
+
+
+def active(telemetry: "TelemetryRecorder | None"
+           ) -> "TelemetryRecorder | None":
+    """Normalize a ``telemetry=`` constructor argument: a disabled
+    recorder becomes ``None`` so instrumented hot paths pay only a single
+    ``is not None`` check per event site.  Consequence: ``enabled`` is a
+    construction-time decision — flipping it after wiring has no effect
+    on classes that already normalized."""
+    if telemetry is None or not telemetry.enabled:
+        return None
+    return telemetry
+
+
+class TelemetryRecorder:
+    """Buffers typed events for one run.
+
+    Attributes:
+        run: the run id events are filed under in the :class:`RunStore`.
+        enabled: construction-time switch; a disabled recorder emits
+            nothing and is normalized away by :func:`active`.
+        clock: the logical clock (simulated seconds); events emitted
+            without an explicit ``t`` are stamped with it.
+        events: the in-memory buffer (flushed events are dropped from it
+            only on ``flush`` when a store is wired).
+    """
+
+    def __init__(self, run: str = "run", *, enabled: bool = True,
+                 store=None, flush_every: int | None = None):
+        self.run = run
+        self.enabled = enabled
+        self.clock = 0.0
+        self.events: list[TelemetryEvent] = []
+        self._store = store
+        if flush_every is not None and flush_every < 1:
+            raise ValueError("flush_every must be >= 1")
+        if flush_every is not None and store is None:
+            raise ValueError("flush_every needs a store to flush to")
+        self._flush_every = flush_every
+        self._seq = 0
+        self._counts = {"span": 0, "counter": 0, "gauge": 0}
+        self._flushed = 0
+        self._closed = False
+
+    # ------------------------------------------------------------- clock
+    def advance(self, t: float) -> None:
+        """Move the logical clock forward (never backward) — the
+        simulator calls this as simulated time passes so clock-stamped
+        events from time-blind subsystems land at the right instant."""
+        if t > self.clock:
+            self.clock = t
+
+    # ---------------------------------------------------------- emission
+    def _emit(self, kind: str, name: str, value: float, t: float | None,
+              tenant: str, epoch: int | None, wall_s: float | None,
+              attrs: dict) -> None:
+        if not self.enabled:
+            return
+        ev = TelemetryEvent(
+            seq=self._seq, kind=kind, name=name, value=float(value),
+            t=self.clock if t is None else float(t), tenant=tenant,
+            epoch=epoch, attrs=attrs, wall=time.time(), wall_s=wall_s)
+        self._seq += 1
+        self._counts[kind] += 1
+        self.events.append(ev)
+        if (self._flush_every is not None
+                and len(self.events) >= self._flush_every):
+            self.flush()
+
+    def counter(self, name: str, value: float = 1.0, *,
+                t: float | None = None, tenant: str = "",
+                epoch: int | None = None, **attrs) -> None:
+        """Something happened ``value`` times (default 1)."""
+        self._emit("counter", name, value, t, tenant, epoch, None, attrs)
+
+    def gauge(self, name: str, value: float, *, t: float | None = None,
+              tenant: str = "", epoch: int | None = None, **attrs) -> None:
+        """A level sampled at an instant."""
+        self._emit("gauge", name, value, t, tenant, epoch, None, attrs)
+
+    def span(self, name: str, duration: float, *,
+             t: float | None = None, tenant: str = "",
+             epoch: int | None = None, wall_s: float | None = None,
+             **attrs) -> None:
+        """An extent: ``duration`` in deterministic domain time (pass 0.0
+        and ``wall_s=`` for extents only wall clocks can measure)."""
+        self._emit("span", name, duration, t, tenant, epoch, wall_s, attrs)
+
+    @contextlib.contextmanager
+    def timed(self, name: str, *, tenant: str = "",
+              epoch: int | None = None, **attrs) -> Iterator[None]:
+        """Wall-clock a block as a span: the measured seconds land in the
+        nondeterministic ``wall_s`` field, ``value`` stays 0 — use for DP
+        frontier passes, kernel profiles, benchmark suites."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.span(name, 0.0, tenant=tenant, epoch=epoch,
+                      wall_s=time.perf_counter() - t0, **attrs)
+
+    # -------------------------------------------------------- persistence
+    def flush(self, store=None) -> int:
+        """Append buffered-but-unflushed events to the store's JSONL log.
+        Returns the number written (0 for a disabled/empty recorder)."""
+        store = self._store if store is None else store
+        pending = self.events[self._flushed:]
+        if store is None or not pending:
+            return 0
+        n = store.append(self.run, pending)
+        self._flushed += n
+        return n
+
+    def close(self, store=None, **manifest_extra) -> int:
+        """Flush the tail and write the run manifest (per-kind counts,
+        total events, plus any caller metadata).  Idempotent."""
+        store = self._store if store is None else store
+        n = self.flush(store)
+        if store is not None and self.enabled and not self._closed:
+            store.write_manifest(self.run, {
+                "events": self._seq, "counts": dict(self._counts),
+                "clock_end": self.clock, **manifest_extra})
+            self._closed = True
+        return n
+
+    def __repr__(self) -> str:
+        state = "enabled" if self.enabled else "disabled"
+        return (f"TelemetryRecorder(run={self.run!r}, {state}, "
+                f"{self._seq} events, clock={self.clock:.3f})")

@@ -1,0 +1,171 @@
+"""Per-run summary reports over a :class:`~repro.telemetry.RunStore`.
+
+Two layers:
+
+* :func:`sim_aggregates` — the *exact* reconstruction surface: the run
+  totals a :class:`~repro.core.simulator.SimReport` computes in memory
+  (retries, migrations, SLO violations, per-tenant cache hits, total
+  active joules), rebuilt purely from the durable event log.  The
+  acceptance gate (fig7's telemetry section and
+  ``tests/test_telemetry.py``) holds these equal to the in-memory report,
+  so the log is a sufficient statistic for the run — not a lossy shadow.
+* :func:`run_summary` / :func:`render` — the human table: request
+  percentiles (p50/p99), energy, hit rates, retries per epoch, drift and
+  membership history.
+
+CLI (exit-code gated; CI smokes it)::
+
+    python -m repro.telemetry.report <store-dir> [run]
+
+exits nonzero when the store has no runs or the chosen run recorded no
+events — an instrumented pipeline that produced nothing is a failure,
+not an empty table.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from .store import RunStore
+
+
+def percentile(xs: list[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); 0.0 for empty input."""
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = max(0, min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[i]
+
+
+def sim_aggregates(store: RunStore, run: str) -> dict:
+    """Reconstruct a simulated run's ``SimReport`` totals from its event
+    log alone.  Keys mirror the in-memory aggregates they must equal:
+    ``total_retries`` / ``total_migrations`` / ``slo_violations``
+    (``SimReport`` methods of the same name), ``total_active_joules``
+    (sum of per-request active energy incl. radio), and
+    ``cache_hits_by_tenant`` / ``cache_misses_by_tenant`` (the
+    ``PlanCache`` counters, split per tenant — finer than the in-memory
+    cache ever tracked)."""
+    requests = store.events(run, kind="span", name="sim.request")
+    return {
+        "requests": len(requests),
+        "latencies": [e.value for e in requests],
+        "total_retries": int(sum(e.attrs.get("retries", 0)
+                                 for e in requests)),
+        "total_migrations": int(sum(e.attrs.get("migrations", 0)
+                                    for e in requests)),
+        "slo_violations": int(sum(1 for e in requests
+                                  if e.attrs.get("slo_violated"))),
+        "total_active_joules": float(sum(e.attrs.get("active_energy_j",
+                                                     0.0)
+                                         for e in requests)),
+        "cache_hits_by_tenant": {
+            t: int(v) for t, v in store.by_tenant(run,
+                                                  "plan_cache.hit").items()},
+        "cache_misses_by_tenant": {
+            t: int(v)
+            for t, v in store.by_tenant(run, "plan_cache.miss").items()},
+        "retries_by_epoch": {
+            int(k): int(v)
+            for k, v in store.by_epoch(run, "sim.retry").items()},
+    }
+
+
+def run_summary(store: RunStore, run: str) -> dict:
+    """The full per-run summary the CLI renders: :func:`sim_aggregates`
+    plus latency percentiles, cache hit rate, frontier passes, membership
+    epochs, leader elections, and drift events."""
+    agg = sim_aggregates(store, run)
+    lats = agg.pop("latencies")
+    hits = sum(agg["cache_hits_by_tenant"].values())
+    misses = sum(agg["cache_misses_by_tenant"].values())
+    drift = store.events(run, kind="gauge", name="feedback.drift")
+    membership = store.events(run, kind="gauge", name="fleet.membership")
+    summary = {
+        "run": run,
+        **agg,
+        "p50_latency_s": percentile(lats, 50),
+        "p99_latency_s": percentile(lats, 99),
+        "mean_latency_s": sum(lats) / len(lats) if lats else 0.0,
+        "cache_hits": hits,
+        "cache_misses": misses,
+        "cache_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+        "frontier_passes": len(store.events(run, kind="span",
+                                            name="plan.frontier_pass")),
+        "epochs": len(membership),
+        "leader_elections": int(store.counter_total(
+            run, "fleet.leader_election")),
+        "drift_events": len(drift),
+        "max_drift": max((e.value for e in drift), default=0.0),
+        "events": len(store.events(run)),
+    }
+    return summary
+
+
+def render(summary: dict) -> str:
+    """One run, one table — fixed row order so reports diff cleanly."""
+    rows = [
+        ("requests", f"{summary['requests']}"),
+        ("p50 latency", f"{summary['p50_latency_s'] * 1e3:10.1f} ms"),
+        ("p99 latency", f"{summary['p99_latency_s'] * 1e3:10.1f} ms"),
+        ("mean latency", f"{summary['mean_latency_s'] * 1e3:10.1f} ms"),
+        ("active energy", f"{summary['total_active_joules']:10.2f} J"),
+        ("retries", f"{summary['total_retries']}"),
+        ("migrations", f"{summary['total_migrations']}"),
+        ("SLO violations", f"{summary['slo_violations']}"),
+        ("cache hits/misses",
+         f"{summary['cache_hits']}/{summary['cache_misses']} "
+         f"(rate {summary['cache_hit_rate']:.3f})"),
+        ("frontier passes", f"{summary['frontier_passes']}"),
+        ("membership epochs", f"{summary['epochs']}"),
+        ("leader elections", f"{summary['leader_elections']}"),
+        ("drift events", f"{summary['drift_events']} "
+                         f"(max {summary['max_drift']:.3f})"),
+        ("events", f"{summary['events']}"),
+    ]
+    width = max(len(k) for k, _ in rows)
+    lines = [f"== telemetry report: run {summary['run']} =="]
+    lines += [f"  {k:<{width}}  {v}" for k, v in rows]
+    for tenant in sorted(set(summary["cache_hits_by_tenant"])
+                         | set(summary["cache_misses_by_tenant"])):
+        h = summary["cache_hits_by_tenant"].get(tenant, 0)
+        m = summary["cache_misses_by_tenant"].get(tenant, 0)
+        lines.append(f"  tenant {tenant or '<none>':<{width - 7}}  "
+                     f"hits={h} misses={m}")
+    for ep in sorted(summary["retries_by_epoch"]):
+        lines.append(f"  epoch {ep:<{width - 6}}  "
+                     f"retries={summary['retries_by_epoch'][ep]}")
+    return "\n".join(lines)
+
+
+def generate(store: RunStore, run: str | None = None) -> str:
+    """Render the report for ``run`` (default: the latest).  Raises
+    ``ValueError`` when the store has no runs or the run logged no
+    events — the exit-code contract the CI smoke gates on."""
+    if run is None:
+        run = store.latest()
+        if run is None:
+            raise ValueError(f"no runs under {store.root}")
+    if not store.events(run):
+        raise ValueError(f"run {run!r} recorded no events")
+    return render(run_summary(store, run))
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv or argv[0] in ("-h", "--help"):
+        print(__doc__)
+        return 0 if argv else 1
+    store = RunStore(argv[0])
+    run = argv[1] if len(argv) > 1 else None
+    try:
+        print(generate(store, run))
+    except ValueError as e:
+        print(f"telemetry report failed: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

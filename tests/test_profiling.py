@@ -163,10 +163,24 @@ def test_profiler_deterministic_under_seed():
 
 def test_profile_kernels_smoke():
     samples = Profiler(warmup=1, repeats=2, trim=0).profile_kernels()
-    assert len(samples) == 3
-    assert all(s.latency_s > 0 and s.kind == "attn" for s in samples)
+    # full kernel set: attn, decode, ssd — 3 default shapes each
+    assert len(samples) == 9
+    assert {s.kind for s in samples} == {"attn", "decode", "ssd"}
+    assert all(s.latency_s > 0 for s in samples)
     model = LearnedCostModel.fit(samples)
-    assert model.rate(samples[0].key, "attn") > 0
+    for kind in ("attn", "decode", "ssd"):
+        assert model.rate(samples[0].key, kind) > 0
+
+
+def test_profile_kernels_subset_and_shapes():
+    prof = Profiler(warmup=0, repeats=1, trim=0)
+    samples = prof.profile_kernels(kinds=("attn",),
+                                   shapes={"attn": ((1, 32, 2, 16),)})
+    assert len(samples) == 1 and samples[0].kind == "attn"
+    assert samples[0].work == 4.0 * 1 * 32 * 32 * 2 * 16
+    import pytest
+    with pytest.raises(KeyError):
+        prof.profile_kernels(kinds=("conv",))
 
 
 # --------------------------------------------------------------------------

@@ -311,3 +311,37 @@ def test_engine_per_request_objective(small_lm):
     done = eng.run_until_done()
     assert len(done) == 3
     assert eng.dominant_objective() == "latency"      # drained → default
+
+
+def test_fleet_epoch_resizes_elastic_world():
+    """The fleet → runtime wiring (ISSUE 6): a FleetController membership
+    epoch drives ElasticController.on_epoch end-to-end — a departed node
+    shrinks the elastic world (the mesh loses its pod axis), the return
+    grows it back, and telemetry records every transition."""
+    from repro.configs import get_config
+    from repro.core.edge_models import paper_cluster
+    from repro.fleet import ChurnTrace, FleetController
+    from repro.models import build_model
+    from repro.models.config import SHAPES
+    from repro.runtime.elastic import ElasticController
+    from repro.sharding.plan import MULTI_POD
+    from repro.telemetry import TelemetryRecorder
+
+    rec = TelemetryRecorder("elastic")
+    ctl = ElasticController(build_model(get_config("gemma-2b")),
+                            SHAPES["train_4k"], MULTI_POD, telemetry=rec)
+    assert ctl.initial_plan().mesh.n_pods == 2
+    fleet = FleetController(
+        paper_cluster(2),
+        ChurnTrace.scripted([(1.0, "tx2", "leave"), (2.0, "tx2", "join")]),
+        on_epoch=ctl.on_epoch, telemetry=rec)
+    fleet.advance(1.5)                      # tx2 leaves → world of 1
+    assert ctl.current_plan.mesh.n_pods == 1 and ctl.replans == 1
+    fleet.advance(2.5)                      # tx2 returns → world of 2
+    assert ctl.current_plan.mesh.n_pods == 2 and ctl.replans == 2
+    worlds = [e for e in rec.events if e.name == "elastic.world"]
+    assert [e.value for e in worlds] == [1.0, 2.0]
+    assert [e.epoch for e in worlds] == [1, 2]
+    members = [e for e in rec.events if e.name == "fleet.membership"]
+    assert [(e.value, e.epoch) for e in members] == [(1.0, 1), (2.0, 2)]
+    assert len([e for e in rec.events if e.name == "elastic.replan"]) == 2
