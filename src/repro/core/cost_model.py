@@ -18,6 +18,8 @@ from __future__ import annotations
 import dataclasses
 from typing import TYPE_CHECKING, Callable, Protocol, Sequence, runtime_checkable
 
+import numpy as np
+
 if TYPE_CHECKING:
     from .dag import ModelDAG
 
@@ -285,6 +287,36 @@ class AnalyticCostProvider:
             return watts * coster(a, b)
 
         return cost
+
+    # ------------------------------------------------- vectorized fast path
+    # Array variants of the queries above, elementwise bit-identical to the
+    # scalar ones (same operations in the same order, IEEE-754 float64
+    # throughout) — the fast DP engine builds its transition matrices from
+    # these instead of calling the scalar closures O(n²·m) times.
+
+    def segment_cost_matrix(self, dag: "ModelDAG",
+                            resource: Resource) -> np.ndarray:
+        """``M[a, b] == segment_coster(dag, resource)(a, b)`` bit-exactly:
+        (cum[b] − cum[a]) / max(rate, 1e-12), vectorized."""
+        cum = np.asarray(dag.cumulative_flops(), dtype=np.float64)
+        return (cum[None, :] - cum[:, None]) / max(resource.rate, 1e-12)
+
+    def segment_energy_matrix(self, dag: "ModelDAG",
+                              resource: Resource) -> np.ndarray:
+        """``M[a, b] == segment_energy_coster(dag, resource)(a, b)``."""
+        return resource.active_power * self.segment_cost_matrix(dag, resource)
+
+    def comm_time_array(self, nbytes, resource: Resource,
+                        rtt: float | None = None) -> np.ndarray:
+        """Elementwise ``comm_time`` over an array of byte counts."""
+        r = resource.rtt if rtt is None else rtt
+        return r + np.asarray(nbytes, dtype=np.float64) / max(
+            resource.bw, 1e-12)
+
+    def comm_energy_array(self, nbytes, resource: Resource,
+                          rtt: float | None = None) -> np.ndarray:
+        return resource.active_power * self.comm_time_array(nbytes, resource,
+                                                            rtt)
 
     def at_delta(self, delta: float) -> "AnalyticCostProvider":
         """Resources arrive already δ-adjusted; nothing to rebind."""

@@ -24,14 +24,31 @@ sizes following the resource heterogeneity" and back-propagating block by
 block; we implement the exact O(n²·m) variant (n = #blocks is small: ≤ ~200)
 and keep the paper's heterogeneity-descending resource order, which makes the
 greedy seed the DP's first feasible path.
+
+Two engines implement the search (`set_engine` / ``REPRO_PLANNER_ENGINE``):
+
+* ``"reference"`` — the seed's triple-nested pure-Python loops, verbatim.
+* ``"fast"`` (default) — the same recurrences over numpy transition
+  matrices, with per-resource DP rows and whole-call results cached in a
+  :class:`repro.core.dp_cache.PlannerWorkspace`.  Costs enter the inner
+  loops pre-computed but every accumulation keeps the reference's exact
+  float64 association (``(prev + comm) + compute``, first-minimum ties),
+  so both engines return **bit-identical** plans and frontiers — the
+  property tests in ``tests/test_fast_planner.py`` pin this.
 """
 
 from __future__ import annotations
 
+import contextlib
+import os
 from typing import Sequence
+
+import numpy as np
 
 from .cost_model import CostProvider, Resource, resolve_provider
 from .dag import DataPartition, ModelDAG, ModelPartition, Partition
+from .dp_cache import PlannerWorkspace, heterogeneity_order, workspace_for
+from .fingerprint import dag_fingerprint
 from .objective import Objective, resolve_objective
 from .pareto import ParetoFront, pareto_filter
 
@@ -40,6 +57,44 @@ from .pareto import ParetoFront, pareto_filter
 # callers get back, e.g. ``PlannerConfig.front_width``).  Endpoints always
 # survive thinning, so the cap trades interior resolution for speed.
 DP_FRONT_CAP = 8
+
+
+# --------------------------------------------------------------------------
+# Engine selection — vectorized fast path vs pure-Python reference
+# --------------------------------------------------------------------------
+
+_ENGINES = ("fast", "reference")
+_ENGINE = os.environ.get("REPRO_PLANNER_ENGINE", "fast")
+if _ENGINE not in _ENGINES:
+    _ENGINE = "fast"
+
+
+def get_engine() -> str:
+    """The active DP engine: ``"fast"`` (vectorized + cached) or
+    ``"reference"`` (the seed's pure-Python loops)."""
+    return _ENGINE
+
+
+def set_engine(name: str) -> str:
+    """Switch engines; returns the previous one.  Both produce bit-identical
+    plans — the reference exists for regression testing and benchmarking."""
+    if name not in _ENGINES:
+        raise ValueError(f"unknown planner engine {name!r}; "
+                         f"expected one of {_ENGINES}")
+    global _ENGINE
+    prev = _ENGINE
+    _ENGINE = name
+    return prev
+
+
+@contextlib.contextmanager
+def planner_engine(name: str):
+    """Scoped engine override: ``with planner_engine("reference"): ...``."""
+    prev = set_engine(name)
+    try:
+        yield
+    finally:
+        set_engine(prev)
 
 
 def _heterogeneity_order(dag: ModelDAG, resources: Sequence[Resource],
@@ -92,6 +147,21 @@ def partition_model(dag: ModelDAG, resources: Sequence[Resource],
         return partition_model_front(
             dag, resources, weight_transfer=weight_transfer, provider=prov,
             radio_power=obj.radio_power).select(obj)
+    if _ENGINE == "reference":
+        return _partition_model_reference(dag, resources,
+                                          weight_transfer=weight_transfer,
+                                          prov=prov)
+    return _partition_model_fast(dag, resources,
+                                 weight_transfer=weight_transfer, prov=prov,
+                                 ws=workspace_for(prov))
+
+
+def _partition_model_reference(dag: ModelDAG, resources: Sequence[Resource],
+                               *, weight_transfer: bool, prov: CostProvider
+                               ) -> ModelPartition:
+    """The seed's scalar DP, verbatim — the bit-identity oracle for
+    :func:`_partition_model_fast`."""
+    n = len(dag.blocks)
     # order by the provider's view of the DAG's dominant kind — for the
     # analytic provider this is exactly the seed's rate ordering, for a
     # calibrated one it follows measured rates
@@ -170,6 +240,211 @@ def partition_model(dag: ModelDAG, resources: Sequence[Resource],
                           predicted_latency=end_cost)
 
 
+# ----------------------------------------------------- fast-engine plumbing
+
+def _cached_array(ws: PlannerWorkspace | None, key, build):
+    """Fetch a setup array from the workspace (or build it uncached)."""
+    if ws is None:
+        return build()
+    v = ws.arrays.get(key)
+    if v is None:
+        v = build()
+        ws.arrays.put(key, v)
+    return v
+
+
+def _segment_matrix(prov: CostProvider, dag: ModelDAG,
+                    r: Resource) -> np.ndarray:
+    """``M[s, i] == segment_coster(dag, r)(s, i)`` — via the provider's
+    vectorized method when it has one, else by evaluating the closure over
+    the (cached-once) upper triangle."""
+    fn = getattr(prov, "segment_cost_matrix", None)
+    if fn is not None:
+        return np.ascontiguousarray(fn(dag, r), dtype=np.float64)
+    return _matrix_from_coster(prov.segment_coster(dag, r), len(dag.blocks))
+
+
+def _energy_matrix(prov: CostProvider, dag: ModelDAG,
+                   r: Resource) -> np.ndarray:
+    fn = getattr(prov, "segment_energy_matrix", None)
+    if fn is not None:
+        return np.ascontiguousarray(fn(dag, r), dtype=np.float64)
+    return _matrix_from_coster(prov.segment_energy_coster(dag, r),
+                               len(dag.blocks))
+
+
+def _matrix_from_coster(coster, n: int) -> np.ndarray:
+    M = np.zeros((n + 1, n + 1), dtype=np.float64)
+    for a in range(n + 1):
+        row = M[a]
+        for b in range(a + 1, n + 1):
+            row[b] = coster(a, b)
+    return M
+
+
+def _xfer_bytes(dag: ModelDAG) -> list[float]:
+    """Activation bytes entering a stage that starts at block ``s`` (the
+    scalar DP's ``xfer``); index n is padding for the masked diagonal."""
+    n = len(dag.blocks)
+    return ([dag.input_bytes]
+            + [dag.blocks[s].bytes_in for s in range(1, n)] + [0.0])
+
+
+def _comm_vector(prov: CostProvider, dag: ModelDAG,
+                 r: Resource) -> np.ndarray:
+    """``v[s] == prov.comm_time(xfer(s), r)`` for every stage start s."""
+    xfer = _xfer_bytes(dag)
+    fn = getattr(prov, "comm_time_array", None)
+    v = fn(np.asarray(xfer, dtype=np.float64), r) if fn is not None else None
+    if v is None:
+        v = np.asarray([prov.comm_time(x, r) for x in xfer],
+                       dtype=np.float64)
+    return v
+
+
+def _comm_energy_vector(prov: CostProvider, dag: ModelDAG,
+                        r: Resource) -> np.ndarray:
+    xfer = _xfer_bytes(dag)
+    fn = getattr(prov, "comm_energy_array", None)
+    v = fn(np.asarray(xfer, dtype=np.float64), r) if fn is not None else None
+    if v is None:
+        v = np.asarray([prov.comm_energy(x, r) for x in xfer],
+                       dtype=np.float64)
+    return v
+
+
+def _cum_params(dag: ModelDAG) -> np.ndarray:
+    pre = [0.0]
+    for b in dag.blocks:
+        pre.append(pre[-1] + b.param_bytes)
+    return np.asarray(pre, dtype=np.float64)
+
+
+def _weight_matrix(prov: CostProvider, dag: ModelDAG,
+                   r: Resource) -> np.ndarray:
+    """``W[s, i] == prov.comm_time(seg_params(s, i), r, rtt=0.0)``."""
+    cp = _cum_params(dag)
+    seg = cp[None, :] - cp[:, None]
+    fn = getattr(prov, "comm_time_array", None)
+    W = fn(seg, r, 0.0) if fn is not None else None
+    if W is None:
+        n = len(dag.blocks)
+        W = np.zeros((n + 1, n + 1), dtype=np.float64)
+        for a in range(n + 1):
+            for b in range(a + 1, n + 1):
+                W[a, b] = prov.comm_time(float(seg[a, b]), r, rtt=0.0)
+    return W
+
+
+def _weight_energy_matrix(prov: CostProvider, dag: ModelDAG,
+                          r: Resource) -> np.ndarray:
+    cp = _cum_params(dag)
+    seg = cp[None, :] - cp[:, None]
+    fn = getattr(prov, "comm_energy_array", None)
+    WE = fn(seg, r, 0.0) if fn is not None else None
+    if WE is None:
+        n = len(dag.blocks)
+        WE = np.zeros((n + 1, n + 1), dtype=np.float64)
+        for a in range(n + 1):
+            for b in range(a + 1, n + 1):
+                WE[a, b] = prov.comm_energy(float(seg[a, b]), r, rtt=0.0)
+    return WE
+
+
+def _partition_model_fast(dag: ModelDAG, resources: Sequence[Resource],
+                          *, weight_transfer: bool, prov: CostProvider,
+                          ws: PlannerWorkspace | None) -> ModelPartition:
+    """The scalar DP as a per-resource matrix recurrence.
+
+    Row j over all cells at once: ``M[s, i] = (best[j-1][s] + comm[s]) +
+    C[s, i] (+ W[s, i])`` masked to s < i; ``dp[j] = M.min(axis=0)`` and
+    ``parent[j] = M.argmin(axis=0)`` (numpy's first-minimum matches the
+    reference's strict-less replacement, so ties pick the same s).  Each
+    addition keeps the reference's left-to-right association, so every cell
+    — and the backtracked plan — is bit-identical to
+    :func:`_partition_model_reference`.
+
+    Rows are cached in the workspace keyed by the ordered resource
+    *prefix*: row j depends only on ``res[:j]``, so a membership epoch that
+    removes the node at order position k recomputes only rows ≥ k, and a
+    repeated call recomputes nothing (the whole result is memoized too).
+    """
+    n = len(dag.blocks)
+    dfp = dag_fingerprint(dag)
+    rkey = ("pm", dfp, tuple(resources), weight_transfer)
+    if ws is not None:
+        memo = ws.results.get(rkey)
+        if memo is not None:
+            return memo
+    res, order = heterogeneity_order(ws, dag, resources, prov, dfp)
+    m = len(res)
+    INF = float("inf")
+    mask = (ws.valid_mask(n) if ws is not None
+            else np.triu(np.ones((n + 1, n + 1), dtype=bool), k=1))
+
+    best_row = np.full(n + 1, np.inf)
+    best_row[0] = 0.0
+    bestj_row = np.zeros(n + 1, dtype=np.int64)
+    rows: list[tuple] = []
+    prefix: tuple = ()
+    for j in range(1, m + 1):
+        r = res[j - 1]
+        prefix = prefix + (r,)
+        key = ("srow", dfp, weight_transfer, prefix)
+        rec = ws.scalar_rows.get(key) if ws is not None else None
+        if rec is None:
+            C = _cached_array(ws, ("C", dfp, r),
+                              lambda: _segment_matrix(prov, dag, r))
+            comm = _cached_array(ws, ("comm", dfp, r),
+                                 lambda: _comm_vector(prov, dag, r))
+            M = (best_row + comm)[:, None] + C
+            if weight_transfer and j > 1:
+                W = _cached_array(ws, ("W", dfp, r),
+                                  lambda: _weight_matrix(prov, dag, r))
+                M = M + W
+            M = np.where(mask, M, np.inf)
+            dp_row = M.min(axis=0)
+            parent_row = M.argmin(axis=0)
+            dp_row[0] = 0.0
+            better = dp_row < best_row
+            rec = (dp_row, np.where(better, dp_row, best_row),
+                   np.where(better, j, bestj_row).astype(np.int64),
+                   parent_row)
+            if ws is not None:
+                ws.scalar_rows.put(key, rec)
+                ws.rows_computed += 1
+        elif ws is not None:
+            ws.rows_reused += 1
+        rows.append(rec)
+        best_row, bestj_row = rec[1], rec[2]
+
+    end_j, end_cost = 0, INF
+    for j in range(1, m + 1):
+        v = rows[j - 1][0][n]
+        if v < INF:
+            c = float(v) + prov.comm_time(dag.output_bytes, res[j - 1])
+            if c < end_cost:
+                end_cost, end_j = c, j
+    if end_cost == INF:
+        raise RuntimeError("model-partition DP found no feasible plan")
+
+    cuts: list[int] = [n]
+    assign: list[int] = []
+    j, i = end_j, n
+    while i > 0:
+        s = int(rows[j - 1][3][i])
+        assign.append(order[j - 1])
+        cuts.append(s)
+        j, i = (int(rows[j - 2][2][s]) if j >= 2 else 0), s
+    cuts.reverse()
+    assign.reverse()
+    plan = ModelPartition(boundaries=tuple(cuts), assignment=tuple(assign),
+                          predicted_latency=end_cost)
+    if ws is not None:
+        ws.results.put(rkey, plan)
+    return plan
+
+
 def _model_front_search(dag: ModelDAG, resources: Sequence[Resource],
                         *, weight_transfer: bool, prov: CostProvider,
                         radio_power: float,
@@ -192,7 +467,24 @@ def _model_front_search(dag: ModelDAG, resources: Sequence[Resource],
     here is float-identical to the scalar DP's plan.  Returns the distinct
     partitions realising the final non-dominated states; callers re-price
     them uniformly and skyline-filter.
+
+    Dispatches on the active engine; both produce bit-identical results.
     """
+    if _ENGINE == "reference":
+        return _model_front_search_reference(
+            dag, resources, weight_transfer=weight_transfer, prov=prov,
+            radio_power=radio_power, cap=cap)
+    return _model_front_search_fast(
+        dag, resources, weight_transfer=weight_transfer, prov=prov,
+        radio_power=radio_power, cap=cap, ws=workspace_for(prov))
+
+
+def _model_front_search_reference(
+        dag: ModelDAG, resources: Sequence[Resource],
+        *, weight_transfer: bool, prov: CostProvider, radio_power: float,
+        cap: int = DP_FRONT_CAP) -> list[ModelPartition]:
+    """The seed's frontier DP, verbatim — the bit-identity oracle for
+    :func:`_model_front_search_fast`."""
     n, m = len(dag.blocks), len(resources)
     res, order = _heterogeneity_order(dag, resources, prov)
     costers = [prov.segment_coster(dag, r) for r in res]
@@ -280,6 +572,324 @@ def _model_front_search(dag: ModelDAG, resources: Sequence[Resource],
     return plans
 
 
+def _model_front_search_fast(
+        dag: ModelDAG, resources: Sequence[Resource],
+        *, weight_transfer: bool, prov: CostProvider, radio_power: float,
+        cap: int, ws: PlannerWorkspace | None) -> list[ModelPartition]:
+    """The frontier DP with pre-computed transition costs and cached rows.
+
+    The capped per-cell insertion (``pareto_filter``) is *order-dependent*
+    — latency-gap thinning at intermediate overflows depends on arrival
+    order — so the cell update cannot be batch-vectorized without changing
+    results.  Instead the fast path (1) pre-computes every per-(s, i)
+    stage cost as numpy matrices converted once to Python-float lists
+    (keeping the reference's exact association, e.g. stage energy is
+    ``((comm_en + seg_en) + radio·comm) [+ (wt_en + radio·wt)] +
+    idle_rest·((comm + seg) + wt)``), (2) screens whole predecessor groups
+    with an exact corner test — the (min-lat, min-en) corner over a
+    predecessor list lower-bounds every candidate it generates, and a cell
+    point weakly dominating the corner rejects them all, exactly as the
+    reference's per-candidate weak-dominance check would one by one — and
+    (3) caches finished rows keyed by the ordered resource *prefix* (plus
+    the flags and the cluster idle-power total the stage energies bake
+    in), so repeated and incremental passes replay instead of re-search.
+
+    States, insertion order, tie-breaks, and caps are identical to the
+    reference, so the surviving skylines are bit-identical.
+    """
+    n, m = len(dag.blocks), len(resources)
+    dfp = dag_fingerprint(dag)
+    idle_total = sum(r.idle_power for r in resources)
+    rkey = ("mfs", dfp, tuple(resources), weight_transfer, radio_power, cap)
+    if ws is not None:
+        memo = ws.results.get(rkey)
+        if memo is not None:
+            return memo
+    res, order = heterogeneity_order(ws, dag, resources, prov, dfp)
+
+    zero = (0.0, 0.0, 0, 0, None)
+    best_prev: list[list] = [[zero]] + [[] for _ in range(n)]
+    dp_rows: list[list[list]] = []
+    prefix: tuple = ()
+    for j in range(1, m + 1):
+        r = res[j - 1]
+        prefix = prefix + (r,)
+        key = ("frow", dfp, weight_transfer, radio_power, cap, idle_total,
+               prefix)
+        rec = ws.front_rows.get(key) if ws is not None else None
+        if rec is None:
+            wt_active = weight_transfer and j > 1
+            idle_rest = idle_total - r.idle_power
+            if all(len(c) <= 1 for c in best_prev):
+                rec = _front_row_singleton(
+                    ws, dag, r, prov, dfp=dfp, j=j, n=n,
+                    wt_active=wt_active, radio_power=radio_power,
+                    idle_rest=idle_rest, best_prev=best_prev, cap=cap,
+                    zero=zero)
+            else:
+                rec = _front_row_general(
+                    ws, dag, r, prov, dfp=dfp, j=j, n=n,
+                    wt_active=wt_active, radio_power=radio_power,
+                    idle_rest=idle_rest, best_prev=best_prev, cap=cap,
+                    zero=zero)
+            if ws is not None:
+                ws.front_rows.put(key, rec)
+                ws.rows_computed += 1
+        elif ws is not None:
+            ws.rows_reused += 1
+        dp_rows.append(rec[0])
+        best_prev = rec[1]
+
+    finals: list = []
+    for j in range(1, m + 1):
+        r = res[j - 1]
+        t_out = prov.comm_time(dag.output_bytes, r)
+        e_out = (prov.comm_energy(dag.output_bytes, r)
+                 + radio_power * t_out
+                 + (idle_total - r.idle_power) * t_out)
+        for st in dp_rows[j - 1][n]:
+            finals = pareto_filter(
+                finals, (st[0] + t_out, st[1] + e_out, st), cap=4 * cap)
+    if not finals:
+        raise RuntimeError("model-partition DP found no feasible plan")
+
+    plans: list[ModelPartition] = []
+    for lat, _en, st in finals:
+        cuts: list[int] = [n]
+        assign: list[int] = []
+        while st[4] is not None:                 # until the zero state
+            assign.append(order[st[2] - 1])
+            cuts.append(st[3])
+            st = st[4]
+        cuts.reverse()
+        assign.reverse()
+        plans.append(ModelPartition(boundaries=tuple(cuts),
+                                    assignment=tuple(assign),
+                                    predicted_latency=lat))
+    if ws is not None:
+        ws.results.put(rkey, plans)
+    return plans
+
+
+def _front_energy_array(ws: PlannerWorkspace | None, dag: ModelDAG,
+                        r: Resource, prov: CostProvider, *, dfp: str,
+                        radio_power: float, wt_active: bool,
+                        idle_rest: float) -> np.ndarray:
+    """Per-(s, i) stage energy for the frontier DP.
+
+    Mirrors the reference's accumulation exactly:
+    ``en = (comm_en + seg_en) + radio·comm``, then ``+ (wt_en + radio·wt)``
+    under weight transfer, then ``+ idle_rest · ((comm + seg) + wt)``.
+    The idle-independent part is cached per resource; the idle term
+    depends on the cluster's total idle power, so it folds in per call
+    (one fused numpy op) and the finished table is cached on the row key's
+    ``idle_total`` via the front-row cache."""
+    def build_pre():
+        comm = _comm_vector(prov, dag, r)
+        en = (_comm_energy_vector(prov, dag, r)[:, None]
+              + _energy_matrix(prov, dag, r)) \
+            + (radio_power * comm)[:, None]
+        lat = comm[:, None] + _segment_matrix(prov, dag, r)
+        if wt_active:
+            W = _weight_matrix(prov, dag, r)
+            en = en + (_weight_energy_matrix(prov, dag, r) + radio_power * W)
+            lat = lat + W
+        return en, lat
+    en_pre, lat_tot = _cached_array(
+        ws, ("ENpre", dfp, r, radio_power, wt_active), build_pre)
+    return en_pre + idle_rest * lat_tot
+
+
+def _front_row_singleton(ws: PlannerWorkspace | None, dag: ModelDAG,
+                         r: Resource, prov: CostProvider, *, dfp: str,
+                         j: int, n: int, wt_active: bool, radio_power: float,
+                         idle_rest: float, best_prev: list, cap: int,
+                         zero: tuple) -> tuple:
+    """One frontier-DP row where every predecessor cell holds at most one
+    state — the common shape (benchmark clusters never leave it), solved
+    almost entirely in numpy.
+
+    With singleton predecessors, cell (j, i) sees exactly one candidate per
+    start s, so all candidate coordinates form two matrices computed with
+    the reference's own per-element association (``(prev + comm) + seg
+    [+ wt]`` for latency, ``prev + stage`` for energy — bit-identical
+    float64 ops).  The sequential capped insertion then has a closed form
+    for most columns.  While every arriving candidate stays *comparable*
+    with the running occupant, the occupant after start s is exactly the
+    pair of exclusive running minima ``(min lat, min en)`` over starts
+    before s — a swap lowers both coordinates to the new joint minimum, a
+    rejection lowers neither — so a column with no incomparable arrival
+    (checked vectorized against those same exclusive cummins, which *are*
+    the occupant up to the first violation) finishes as a single state:
+    the joint coordinate-wise minimum, attributed to the earliest start
+    achieving both.  Columns where a genuine latency–energy trade-off
+    appears (rare) are replayed sequentially — the reference algorithm on
+    the pre-tabulated candidate values — so caps, thinning, and tie
+    preference behave identically in every regime."""
+    p0 = np.array([c[0][0] if c else np.inf for c in best_prev])
+    pE = np.array([c[0][1] if c else np.inf for c in best_prev])
+    comm = _cached_array(ws, ("comm", dfp, r),
+                         lambda: _comm_vector(prov, dag, r))
+    LAT = (p0 + comm)[:, None] + _cached_array(
+        ws, ("C", dfp, r), lambda: _segment_matrix(prov, dag, r))
+    if wt_active:
+        LAT = LAT + _cached_array(ws, ("W", dfp, r),
+                                  lambda: _weight_matrix(prov, dag, r))
+    EN = pE[:, None] + _front_energy_array(
+        ws, dag, r, prov, dfp=dfp, radio_power=radio_power,
+        wt_active=wt_active, idle_rest=idle_rest)
+    mask = (ws.valid_mask(n) if ws is not None
+            else np.triu(np.ones((n + 1, n + 1), dtype=bool), k=1))
+    inf = np.inf
+    LATm = np.where(mask, LAT, inf)
+    ENm = np.where(mask, EN, inf)
+    accL = np.minimum.accumulate(LATm, axis=0)
+    accE = np.minimum.accumulate(ENm, axis=0)
+    exL = np.empty_like(accL)
+    exL[0] = inf
+    exL[1:] = accL[:-1]
+    exE = np.empty_like(accE)
+    exE[0] = inf
+    exE[1:] = accE[:-1]
+    event = (((LATm < exL) & (ENm > exE))
+             | ((LATm > exL) & (ENm < exE))).any(axis=0)
+    minL = np.empty(n + 1)
+    minL[0] = inf
+    minL[1:] = np.diagonal(accL, offset=1)
+    minE = np.empty(n + 1)
+    minE[0] = inf
+    minE[1:] = np.diagonal(accE, offset=1)
+    src = (((LATm == minL) & (ENm == minE)).argmax(axis=0))
+    eventl = event.tolist()
+    minLl = minL.tolist()
+    minEl = minE.tolist()
+    srcl = src.tolist()
+    prev0s = [c[0] if c else None for c in best_prev]
+    valid = [s for s in range(n + 1) if best_prev[s]]
+    tail = valid[1:]                       # s = 0 is always valid and first
+    dp_cells: list[list] = [[zero]] + [None] * n
+    best_cells: list[list] = [[zero]] + [None] * n
+    pf = pareto_filter
+    for i in range(1, n + 1):
+        if not eventl[i]:
+            s0 = srcl[i]
+            cell = [(minLl[i], minEl[i], j, s0, prev0s[s0])]
+        else:
+            # a latency–energy trade-off appeared: replay this column's
+            # sequential insertion exactly (O(1) while the cell is a
+            # single state, pareto_filter once it widens)
+            li = LAT[:i, i].tolist()
+            ei = EN[:i, i].tolist()
+            ol = li[0]
+            oe = ei[0]
+            osrc = 0
+            cell = None
+            for s in tail:
+                if s >= i:
+                    break
+                lat = li[s]
+                if cell is None:
+                    en = ei[s]
+                    if ol <= lat and oe <= en:
+                        continue                   # dominated by occupant
+                    if lat <= ol and en <= oe:
+                        ol, oe, osrc = lat, en, s  # occupant replaced
+                        continue
+                    ost = (ol, oe, j, osrc, prev0s[osrc])
+                    nst = (lat, en, j, s, prev0s[s])
+                    cell = [ost, nst] if ol < lat else [nst, ost]
+                else:
+                    cell = pf(cell, (lat, ei[s], j, s, prev0s[s]), cap)
+            if cell is None:
+                cell = [(ol, oe, j, osrc, prev0s[osrc])]
+        dp_cells[i] = cell
+        bp = best_prev[i]
+        if not bp:
+            best_cells[i] = list(cell)
+        elif len(bp) == 1 and len(cell) == 1:
+            q, c = bp[0], cell[0]
+            if q[0] <= c[0] and q[1] <= c[1]:
+                best_cells[i] = list(bp)
+            elif c[0] <= q[0] and c[1] <= q[1]:
+                best_cells[i] = [c]
+            else:
+                best_cells[i] = [q, c] if q[0] < c[0] else [c, q]
+        else:
+            merged = list(bp)
+            for st in cell:
+                merged = pf(merged, st, cap)
+            best_cells[i] = merged
+    return dp_cells, best_cells
+
+
+def _front_row_general(ws: PlannerWorkspace | None, dag: ModelDAG,
+                       r: Resource, prov: CostProvider, *, dfp: str,
+                       j: int, n: int, wt_active: bool, radio_power: float,
+                       idle_rest: float, best_prev: list, cap: int,
+                       zero: tuple) -> tuple:
+    """One frontier-DP row with multi-state predecessor cells — the exact
+    sequential insertion over pre-tabulated stage costs, plus the corner
+    screen (evaluated at arrival time, so unaffected by later thinning)."""
+    # stage-cost tables as Python floats (bit-exact float64 → float)
+    CL = _cached_array(
+        ws, ("commL", dfp, r),
+        lambda: _comm_vector(prov, dag, r).tolist())
+    C2 = _cached_array(
+        ws, ("CL", dfp, r),
+        lambda: _segment_matrix(prov, dag, r).tolist())
+    WL = (_cached_array(
+        ws, ("WL", dfp, r),
+        lambda: _weight_matrix(prov, dag, r).tolist())
+        if wt_active else None)
+    EN = _front_energy_array(ws, dag, r, prov, dfp=dfp,
+                             radio_power=radio_power,
+                             wt_active=wt_active,
+                             idle_rest=idle_rest).tolist()
+    dp_cells: list[list] = [[zero]] + [[] for _ in range(n)]
+    best_cells: list[list] = [[zero]] + [[] for _ in range(n)]
+    for i in range(1, n + 1):
+        cell: list = []
+        for s in range(i):
+            prevs = best_prev[s]
+            if not prevs:
+                continue
+            cl = CL[s]
+            cs = C2[s][i]
+            wtv = WL[s][i] if wt_active else 0.0
+            es = EN[s][i]
+            if cell:
+                # exact group screen: the corner lower-bounds every
+                # candidate from prevs; a cell point weakly dominating it
+                # rejects them all (what the reference's insert would do
+                # candidate by candidate)
+                lo_lat = prevs[0][0] + cl + cs
+                if wtv:
+                    lo_lat += wtv
+                lo_en = prevs[-1][1] + es
+                skip = False
+                for q in cell:
+                    if q[0] <= lo_lat and q[1] <= lo_en:
+                        skip = True
+                        break
+                if skip:
+                    continue
+            for prev in prevs:
+                lat = prev[0] + cl + cs
+                if wtv:
+                    lat += wtv
+                cell = pareto_filter(
+                    cell, (lat, prev[1] + es, j, s, prev), cap)
+        dp_cells[i] = cell
+        if cell:
+            merged = list(best_prev[i])
+            for st in cell:
+                merged = pareto_filter(merged, st, cap)
+            best_cells[i] = merged
+        else:
+            best_cells[i] = best_prev[i]
+    return dp_cells, best_cells
+
+
 def partition_model_front(dag: ModelDAG, resources: Sequence[Resource],
                           *, weight_transfer: bool = False,
                           provider: CostProvider | None = None,
@@ -294,6 +904,13 @@ def partition_model_front(dag: ModelDAG, resources: Sequence[Resource],
     :func:`predicted_energy` (with ``radio_power`` on transfer seconds) and
     skyline-filtered."""
     prov = resolve_provider(provider)
+    ws = workspace_for(prov) if _ENGINE == "fast" else None
+    if ws is not None:
+        rkey = ("pmf", dag_fingerprint(dag), tuple(resources),
+                weight_transfer, radio_power, width)
+        memo = ws.results.get(rkey)
+        if memo is not None:
+            return memo
     seed = partition_model(dag, resources, weight_transfer=weight_transfer,
                            provider=prov)
     cands = [p for p in _model_front_search(
@@ -306,8 +923,11 @@ def partition_model_front(dag: ModelDAG, resources: Sequence[Resource],
                 predicted_energy(dag, resources, p, prov,
                                  radio_power=radio_power), p)
 
-    return ParetoFront.build([price(p) for p in cands], anchor=price(seed),
-                             width=width)
+    front = ParetoFront.build([price(p) for p in cands], anchor=price(seed),
+                              width=width)
+    if ws is not None:
+        ws.results.put(rkey, front)
+    return front
 
 
 # --------------------------------------------------------------------------
@@ -374,7 +994,15 @@ def _data_candidates(dag: ModelDAG, resources: Sequence[Resource],
                      prov: CostProvider) -> list[DataPartition]:
     """One balanced candidate per σ = 1..m over heterogeneity-ordered
     resources (the seed enumeration, every subset kept)."""
-    _, order = _heterogeneity_order(dag, resources, prov)
+    ws = workspace_for(prov) if _ENGINE == "fast" else None
+    if ws is not None:
+        rkey = ("dc", dag_fingerprint(dag), tuple(resources))
+        memo = ws.results.get(rkey)
+        if memo is not None:
+            return memo
+        _, order = heterogeneity_order(ws, dag, resources, prov)
+    else:
+        _, order = _heterogeneity_order(dag, resources, prov)
     if not all(b.data_splittable for b in dag.blocks):
         order = order[:1]
     out: list[DataPartition] = []
@@ -386,6 +1014,8 @@ def _data_candidates(dag: ModelDAG, resources: Sequence[Resource],
             continue
         out.append(DataPartition(fractions=fr, assignment=tuple(subset_idx),
                                  predicted_latency=t))
+    if ws is not None:
+        ws.results.put(rkey, out)
     return out
 
 
@@ -397,6 +1027,13 @@ def partition_data_front(dag: ModelDAG, resources: Sequence[Resource],
     σ = 1 on the fastest resource is always feasible, so the front is never
     empty; the seed's latency winner is its ``latency_optimal`` point."""
     prov = resolve_provider(provider)
+    ws = workspace_for(prov) if _ENGINE == "fast" else None
+    if ws is not None:
+        rkey = ("pdf", dag_fingerprint(dag), tuple(resources), radio_power,
+                width)
+        memo = ws.results.get(rkey)
+        if memo is not None:
+            return memo
     cands = _data_candidates(dag, resources, prov)
     if not cands:
         raise RuntimeError("data-partition search found no feasible plan")
@@ -410,7 +1047,10 @@ def partition_data_front(dag: ModelDAG, resources: Sequence[Resource],
     anchor = (seed.predicted_latency,
               predicted_energy(dag, resources, seed, prov,
                                radio_power=radio_power), seed)
-    return ParetoFront.build(points, anchor=anchor, width=width)
+    front = ParetoFront.build(points, anchor=anchor, width=width)
+    if ws is not None:
+        ws.results.put(rkey, front)
+    return front
 
 
 # --------------------------------------------------------------------------
@@ -453,16 +1093,27 @@ def partition_front(dag: ModelDAG, resources: Sequence[Resource],
     keeps the model plan — the seed's ``Θ = min(Θ_ω, Θ_σ)`` tie rule.  The
     front's ``latency_optimal`` plan is therefore exactly what
     :func:`partition` returns under the default objective."""
+    prov = resolve_provider(provider)
+    ws = workspace_for(prov) if _ENGINE == "fast" else None
+    if ws is not None:
+        rkey = ("pf", dag_fingerprint(dag), tuple(resources),
+                weight_transfer, radio_power, width)
+        memo = ws.results.get(rkey)
+        if memo is not None:
+            return memo
     mf = partition_model_front(dag, resources,
                                weight_transfer=weight_transfer,
-                               provider=provider, radio_power=radio_power)
-    df = partition_data_front(dag, resources, provider=provider,
+                               provider=prov, radio_power=radio_power)
+    df = partition_data_front(dag, resources, provider=prov,
                               radio_power=radio_power)
     # Θ = min(Θ_ω, Θ_σ), model on ties — the seed's mode pick is the anchor
     anchor = (mf.latency_optimal
               if mf.latency_optimal.latency <= df.latency_optimal.latency
               else df.latency_optimal)
-    return ParetoFront.build(list(mf) + list(df), anchor=anchor, width=width)
+    front = ParetoFront.build(list(mf) + list(df), anchor=anchor, width=width)
+    if ws is not None:
+        ws.results.put(rkey, front)
+    return front
 
 
 # --------------------------------------------------------------------------

@@ -16,7 +16,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Sequence
+from weakref import WeakKeyDictionary
 
 from .cost_model import (Cluster, CostProvider, node_as_resource,
                          resolve_provider)
@@ -27,21 +29,54 @@ from .local_partitioner import (LocalPlan, p1_plan, plan_local,
                                 plan_local_front)
 from .objective import Objective, resolve_objective
 from .pareto import ParetoFront, ParetoPoint, pareto_filter
+from . import dp_partitioner as _dp
+
+# Sub-workload memo for the fast planner engine: a hierarchical pass (and
+# every speculative pre-warm over N-1 memberships) re-derives the same
+# ``dag.blocks[lo:hi]`` slices and σ-scaled copies many times over.  Keyed
+# weakly on the parent DAG (a frozen dataclass — hashable, weakref-able) so
+# entries die with the model; returning the *same* sub-DAG object also makes
+# every downstream fingerprint/prefix-sum cache hit.  Bounded per DAG.
+_SUBDAG_CACHE: "WeakKeyDictionary[ModelDAG, OrderedDict]" = (
+    WeakKeyDictionary())
+_SUBDAG_MAX = 512
 
 
 def sub_dag_for(dag: ModelDAG, a: GlobalAssignment) -> ModelDAG:
     """Extract the sub-workload a global assignment hands to a node."""
+    per = None
+    if _dp.get_engine() == "fast":
+        try:
+            per = _SUBDAG_CACHE.get(dag)
+            if per is None:
+                per = OrderedDict()
+                _SUBDAG_CACHE[dag] = per
+        except TypeError:             # unhashable custom DAG subclass
+            per = None
+        else:
+            key = (a.block_range, a.fraction)
+            got = per.get(key)
+            if got is not None:
+                per.move_to_end(key)
+                return got
     if a.block_range is not None:                        # model mode: ω blocks
         lo, hi = a.block_range
         blocks = dag.blocks[lo:hi]
-        return ModelDAG(name=f"{dag.name}[{lo}:{hi}]", blocks=blocks,
-                        input_bytes=blocks[0].bytes_in,
-                        output_bytes=blocks[-1].bytes_out)
-    assert a.fraction is not None                        # data mode: σ slice
-    return ModelDAG(name=f"{dag.name}x{a.fraction:.3f}",
-                    blocks=tuple(b.scaled(a.fraction) for b in dag.blocks),
-                    input_bytes=dag.input_bytes * a.fraction,
-                    output_bytes=dag.output_bytes * a.fraction)
+        sub = ModelDAG(name=f"{dag.name}[{lo}:{hi}]", blocks=blocks,
+                       input_bytes=blocks[0].bytes_in,
+                       output_bytes=blocks[-1].bytes_out)
+    else:
+        assert a.fraction is not None                    # data mode: σ slice
+        sub = ModelDAG(name=f"{dag.name}x{a.fraction:.3f}",
+                       blocks=tuple(b.scaled(a.fraction)
+                                    for b in dag.blocks),
+                       input_bytes=dag.input_bytes * a.fraction,
+                       output_bytes=dag.output_bytes * a.fraction)
+    if per is not None:
+        per[(a.block_range, a.fraction)] = sub
+        while len(per) > _SUBDAG_MAX:
+            per.popitem(last=False)
+    return sub
 
 
 @dataclasses.dataclass(frozen=True)

@@ -19,6 +19,8 @@ import dataclasses
 from .cost_model import (CostProvider, Node, Resource, resolve_provider,
                          processors_as_resources)
 from .dag import DataPartition, ModelDAG, ModelPartition, Partition
+from .dp_cache import workspace_for
+from .fingerprint import dag_fingerprint
 from .objective import Objective, resolve_objective
 from .pareto import ParetoFront, ParetoPoint
 from . import dp_partitioner
@@ -66,9 +68,20 @@ def plan_local_front(sub_dag: ModelDAG, node: Node, *, delta: float = 1.0,
     ``sub_dag`` over its processors.  No radio term — intra-node transfers
     are DRAM copies, not wireless.  The front's ``latency_optimal`` plan is
     exactly :func:`plan_local`'s answer under the default objective."""
+    prov = resolve_provider(provider)
+    ws = (workspace_for(prov)
+          if dp_partitioner.get_engine() == "fast" else None)
+    if ws is not None:
+        # Node is a frozen dataclass, so the hierarchical hot path can memo
+        # the *wrapped* front per (sub-workload, node, δ) — a warm pass skips
+        # even the LocalPlan re-wrapping, not just the DP underneath.
+        rkey = ("plf", dag_fingerprint(sub_dag), node, delta, width)
+        memo = ws.results.get(rkey)
+        if memo is not None:
+            return memo
     kind = dominant_kind(sub_dag)
     resources = processors_as_resources(node, delta, kind)
-    pf = dp_partitioner.partition_front(sub_dag, resources, provider=provider,
+    pf = dp_partitioner.partition_front(sub_dag, resources, provider=prov,
                                         width=width)
     points = []
     for p in pf:
@@ -76,7 +89,10 @@ def plan_local_front(sub_dag: ModelDAG, node: Node, *, delta: float = 1.0,
         points.append(ParetoPoint(p.latency, p.energy, LocalPlan(
             node_name=node.name, mode=mode, partition=p.plan,
             predicted_latency=p.latency, predicted_energy=p.energy)))
-    return ParetoFront(points)
+    front = ParetoFront(points)
+    if ws is not None:
+        ws.results.put(rkey, front)
+    return front
 
 
 def p1_plan(sub_dag: ModelDAG, node: Node, *, delta: float = 1.0,

@@ -93,6 +93,7 @@ class FleetController:
         self.telemetry = _tel_active(telemetry)
         self.leader_elections = 0
         self._cursor = 0
+        self._epoch_hooks: list[Callable[[MembershipEpoch], object]] = []
         self.now = 0.0
         if leader is not None:
             self.manager.elect_leader(leader)
@@ -128,6 +129,17 @@ class FleetController:
     def available_names(self) -> tuple[str, ...]:
         return tuple(n.name for n in self.manager.cluster.nodes
                      if n.available)
+
+    def add_epoch_hook(self, hook: Callable[[MembershipEpoch], object]
+                       ) -> Callable[[MembershipEpoch], object]:
+        """Register an additional per-epoch callback (fired after
+        ``on_epoch``, in registration order).  Unlike the single
+        constructor callback this composes: the serving engine's EXPLORE
+        re-entry and a ``SpeculativePrewarmer``'s next-departure
+        speculation can both observe the same epoch.  Returns the hook so
+        it can be used as a decorator."""
+        self._epoch_hooks.append(hook)
+        return hook
 
     # --------------------------------------------------------------- driving
     def advance(self, now: float) -> tuple[ChurnEvent, ...]:
@@ -178,6 +190,8 @@ class FleetController:
                 events=",".join(e.kind for e in ep.events))
         if self.on_epoch is not None:
             self.on_epoch(ep)
+        for hook in self._epoch_hooks:
+            hook(ep)
 
     def _elect_fallback(self, count: bool = True) -> str | None:
         """Hand the seat over via the shared ``ensure_leader`` policy,

@@ -131,6 +131,10 @@ class LearnedCostModel:
         self.mode = mode
         self.entries: dict[tuple[str, str], _Entry] = {}
         self.energy_entries: dict[tuple[str, str], _Entry] = {}
+        # Monotone mutation counter: every (re)fit or online observation
+        # bumps it, so planner workspaces (repro.core.dp_cache) keyed on
+        # this model can tell cached DP rows went stale.
+        self.revision = 0
 
     # ------------------------------------------------------------------- fit
     @classmethod
@@ -155,12 +159,14 @@ class LearnedCostModel:
                   rows: Sequence[tuple[float, float, float]]) -> None:
         """(Re)fit one latency predictor from (work, traffic, latency) rows."""
         self.entries[(key, kind)] = self._fit_rows(key, kind, rows)
+        self.revision += 1
 
     def fit_energy_entry(self, key: str, kind: str,
                          rows: Sequence[tuple[float, float, float]]) -> None:
         """(Re)fit one energy predictor from (work, traffic, joules) rows —
         the same regression as latency with joules as the response."""
         self.energy_entries[(key, kind)] = self._fit_rows(key, kind, rows)
+        self.revision += 1
 
     def _fit_rows(self, key: str, kind: str,
                   rows: Sequence[tuple[float, float, float]]) -> _Entry:
@@ -295,6 +301,7 @@ class LearnedCostModel:
         """EWMA-blend one measured execution into the fitted rate."""
         if work <= 0 or latency_s <= 0:
             return
+        self.revision += 1
         e = self.entries.get((key, kind))
         if e is None:
             self.entries[(key, kind)] = _Entry(
@@ -317,6 +324,7 @@ class LearnedCostModel:
         marginal energy — the energy twin of :meth:`observe`."""
         if work <= 0 or energy_j <= 0:
             return
+        self.revision += 1
         e = self.energy_entries.get((key, kind))
         if e is None:
             self.energy_entries[(key, kind)] = _Entry(

@@ -22,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+import numpy as np
+
 from repro.core.cost_model import (ANALYTIC, CostProvider, Resource)
 from repro.core.dag import ModelDAG
 
@@ -82,6 +84,38 @@ class CalibratedCostProvider:
             return pre[b] - pre[a]
 
         return cost
+
+    # ------------------------------------------------- vectorized fast path
+    # Matrix/array views of the closures above for the fast DP engine —
+    # elementwise bit-identical (``pre[b] - pre[a]`` is the same float64
+    # subtraction whether done by the closure or by numpy broadcasting).
+
+    def segment_cost_matrix(self, dag: ModelDAG,
+                            resource: Resource) -> np.ndarray:
+        pre = [0.0]
+        for b in dag.blocks:
+            pre.append(pre[-1] + self.block_time(resource, b))
+        p = np.asarray(pre, dtype=np.float64)
+        return p[None, :] - p[:, None]
+
+    def segment_energy_matrix(self, dag: ModelDAG,
+                              resource: Resource) -> np.ndarray:
+        pre = [0.0]
+        for b in dag.blocks:
+            pre.append(pre[-1] + self.block_energy(resource, b))
+        p = np.asarray(pre, dtype=np.float64)
+        return p[None, :] - p[:, None]
+
+    def comm_time_array(self, nbytes, resource: Resource,
+                        rtt: float | None = None):
+        """Vectorized only when the fallback is (None → the caller loops)."""
+        fn = getattr(self.fallback, "comm_time_array", None)
+        return None if fn is None else fn(nbytes, resource, rtt)
+
+    def comm_energy_array(self, nbytes, resource: Resource,
+                          rtt: float | None = None):
+        fn = getattr(self.fallback, "comm_energy_array", None)
+        return None if fn is None else fn(nbytes, resource, rtt)
 
     # ------------------------------------------------------------- energy
     # Fitted energy predictors answer first; a (resource × kind) without one

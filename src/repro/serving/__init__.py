@@ -13,4 +13,5 @@ docs/serving.md for the lifecycle.
 """
 
 from .engine import Request, ServingEngine  # noqa: F401
-from .plan_cache import CacheEntry, LRUEviction, PlanCache  # noqa: F401
+from .plan_cache import (CacheEntry, LRUEviction, PlanCache,  # noqa: F401
+                         SpeculativePrewarmer)

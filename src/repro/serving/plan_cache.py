@@ -110,6 +110,13 @@ class CacheEntry:
     delta: float
     front: ParetoFront
     membership_fingerprint: str = ""
+    # the live DAG object (when the front was planned in-process) — what
+    # prewarming re-plans against other memberships; None for fronts loaded
+    # from a store (they cannot be speculated over, only served)
+    dag: ModelDAG | None = None
+    # built by the pre-warmer, not yet demanded; promoted (and counted as a
+    # prewarm hit) the first time a request lands on it
+    speculative: bool = False
     _nbytes: int | None = None
 
     @property
@@ -221,6 +228,10 @@ class PlanCache:
         self.evictions = 0
         self.invalidations = 0
         self.loaded = 0
+        self.prewarmed = 0
+        self.prewarm_hits = 0
+        self.prewarm_misses = 0
+        self._prewarm_active = False
         if store is not None:
             self.warm_from(store)
 
@@ -286,6 +297,16 @@ class PlanCache:
         if entry is not None:
             self.hits += 1
             entries.move_to_end(key)
+            if entry.speculative:
+                # speculation paid off: the membership the pre-warmer bet
+                # on arrived, and this epoch is served with zero DP work
+                entry.speculative = False
+                self.prewarm_hits += 1
+                if tel is not None:
+                    tel.counter("plan_cache.prewarm_hit", tenant=dag.name,
+                                dag_fp=key[3][:12], membership=key[1][:12])
+            if entry.dag is None:
+                entry.dag = dag       # a loaded front becomes speculatable
             if tel is not None:
                 tel.counter("plan_cache.hit", tenant=dag.name,
                             dag_fp=key[3][:12])
@@ -296,6 +317,13 @@ class PlanCache:
         if tel is not None:
             tel.counter("plan_cache.miss", tenant=dag.name,
                         dag_fp=key[3][:12])
+        if self._prewarm_active:
+            # a demand frontier pass the speculation schedule did not cover
+            # (first-seen tenant, or a multi-node membership jump)
+            self.prewarm_misses += 1
+            if tel is not None:
+                tel.counter("plan_cache.prewarm_miss", tenant=dag.name,
+                            dag_fp=key[3][:12], membership=key[1][:12])
         t0 = time.perf_counter()
         front = self.planner.at_delta(delta).front(dag, self.live_cluster())
         if tel is not None:
@@ -307,7 +335,7 @@ class PlanCache:
         entries[key] = CacheEntry(dag_name=dag.name,
                                   dag_fingerprint=key[3], delta=delta,
                                   front=front,
-                                  membership_fingerprint=key[1])
+                                  membership_fingerprint=key[1], dag=dag)
         self._evict(entries, protect=key)
         self._inserts_since_persist += 1
         if (self.persist_every is not None
@@ -331,6 +359,82 @@ class PlanCache:
             return plan          # cold: keep the frontier pass's own timing
         return dataclasses.replace(
             plan, planning_seconds=time.perf_counter() - t0)
+
+    # ---------------------------------------------------------- prewarming
+    def prewarm(self, memberships=None, dags=None,
+                delta: float | None = None) -> int:
+        """Speculatively build fronts for the memberships likely to arrive
+        next, so the epoch that realizes one is served with **zero**
+        frontier passes.
+
+        ``memberships`` is an iterable of availability masks (tuples of
+        bool over the declared node list); by default the current live
+        mask plus every single-departure neighbour
+        (:func:`repro.core.dp_cache.single_departure_masks`) — the
+        churn-trace-observed common case of one node dropping out.
+        ``dags`` defaults to every tenant this cache has planned
+        in-process (each at the δ it was planned at); pass DAGs explicitly
+        to pre-warm tenants before their first request.
+
+        Fronts that already exist (any earlier demand or speculative pass)
+        are skipped, so re-running after every epoch costs only the truly
+        new memberships.  Speculative entries are inserted **LRU-cold**:
+        under an eviction budget they are the first victims, and a
+        pre-warm sweep can never push a demanded tenant's front out of the
+        table.  The fast DP engine's row caches make each speculative pass
+        cheap — an N-1 membership shares every per-resource row with the
+        full-membership pass that preceded it.
+
+        Each front built emits a ``plan.prewarm`` telemetry span;
+        ``prewarmed`` / ``prewarm_hits`` / ``prewarm_misses`` count the
+        speculation economy in :meth:`stats`.  Returns the number of
+        fronts built by this call."""
+        self._prewarm_active = True
+        base = self.live_cluster()
+        if memberships is None:
+            from repro.core.dp_cache import single_departure_masks
+            live = tuple(bool(n.available) for n in base.nodes)
+            memberships = [live] + single_departure_masks(base)
+        version = self.version
+        entries = self._table(version)
+        if dags is None:
+            targets_by_key: dict = {}
+            for e in list(entries.values()):
+                if e.dag is not None:
+                    targets_by_key.setdefault((e.dag_fingerprint, e.delta),
+                                              (e.dag, e.delta))
+            targets = list(targets_by_key.values())
+        else:
+            d = self.planner.config.delta if delta is None else delta
+            targets = [(dag, d) for dag in dags]
+        tel = self.telemetry
+        built = 0
+        for mask in memberships:
+            masked = base.with_availability(list(mask))
+            if not any(mask):
+                continue                       # never plan an empty fleet
+            mfp = membership_fingerprint(masked)
+            for dag, dg_delta in targets:
+                key = (self.fingerprint, mfp, version,
+                       dag_fingerprint(dag), dg_delta)
+                if key in entries:
+                    continue                   # already warm — free skip
+                t0 = time.perf_counter()
+                front = self.planner.at_delta(dg_delta).front(dag, masked)
+                if tel is not None:
+                    tel.span("plan.prewarm", 0.0, tenant=dag.name,
+                             wall_s=time.perf_counter() - t0,
+                             dag_fp=key[3][:12], membership=mfp[:12],
+                             version=version)
+                entries[key] = CacheEntry(
+                    dag_name=dag.name, dag_fingerprint=key[3],
+                    delta=dg_delta, front=front,
+                    membership_fingerprint=mfp, dag=dag, speculative=True)
+                entries.move_to_end(key, last=False)     # LRU-cold
+                built += 1
+                self.prewarmed += 1
+        self._evict(entries)
+        return built
 
     # ------------------------------------------------------------ eviction
     def _evict(self, entries: "OrderedDict[tuple, CacheEntry]",
@@ -478,8 +582,60 @@ class PlanCache:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
                 "invalidations": self.invalidations, "loaded": self.loaded,
+                "prewarmed": self.prewarmed,
+                "prewarm_hits": self.prewarm_hits,
+                "prewarm_misses": self.prewarm_misses,
+                "speculative": sum(1 for e in self._generation[1].values()
+                                   if e.speculative),
                 "entries": len(self), "nbytes": self.nbytes(),
                 "tenants": self.tenants(), "version": self.version,
                 "fingerprint": self.fingerprint,
                 "membership": self.membership_fingerprint,
                 "hit_rate": self.hit_rate()}
+
+
+class SpeculativePrewarmer:
+    """Membership speculation driven by fleet epochs.
+
+    Wires a :class:`PlanCache` to a ``repro.fleet.FleetController``: every
+    membership epoch (and every explicit :meth:`prime` call — "idle time"
+    in a serving loop) pre-builds fronts for the current membership and all
+    single-departure neighbours, so the *next* departure is served entirely
+    from cache — zero frontier passes, counter-verified via
+    ``plan_cache.prewarm_hit`` and the absence of ``plan.frontier_pass``
+    spans.  The fast DP engine makes each speculative pass share its rows
+    with the pass that preceded it, which is what keeps idle-time
+    speculation affordable (benchmarks/tab1_planner_overhead.py gates it).
+
+    Attributes:
+        cache: the plan cache speculated into.
+        controller: the epoch source (its ``add_epoch_hook`` is used, so a
+            serving engine's own ``on_epoch`` callback is untouched).
+        epochs_seen: epochs observed via the hook.
+        fronts_built: speculative fronts built by this prewarmer.
+    """
+
+    def __init__(self, cache: PlanCache, controller=None):
+        self.cache = cache
+        self.controller = controller
+        self.epochs_seen = 0
+        self.fronts_built = 0
+        if controller is not None:
+            if cache.membership_source is None:
+                cache.membership_source = controller
+            controller.add_epoch_hook(self._on_epoch)
+
+    def prime(self, dags=None) -> int:
+        """Run one speculation sweep now (idle-time trigger).  Returns the
+        number of fronts built; already-warm memberships cost nothing."""
+        built = self.cache.prewarm(dags=dags)
+        self.fronts_built += built
+        return built
+
+    def _on_epoch(self, epoch) -> int:
+        self.epochs_seen += 1
+        return self.prime()
+
+    def stats(self) -> dict:
+        return {"epochs_seen": self.epochs_seen,
+                "fronts_built": self.fronts_built}

@@ -1,0 +1,358 @@
+"""Fast DP engine guarantees, as tests.
+
+The vectorized planner is an *optimization*, never an approximation — so
+every test here is an equality test, not a tolerance test:
+
+* fast == reference **bit-identically** — scalar DP, (lat, energy)
+  frontier DP, and the full hierarchical ``plan_front`` — over the paper
+  workloads and randomized DAG/cluster instances (property-tested via
+  hypothesis when installed, seeded fallback regardless);
+* incremental epoch re-planning: a departure + return replayed through a
+  warm :class:`~repro.core.dp_cache.PlannerWorkspace` yields plans
+  byte-identical to a cold pass, while reusing the DP rows the departed
+  node never touched (``rows_reused`` counts it);
+* speculative pre-warming: with a ``SpeculativePrewarmer`` wired to a
+  ``FleetController``, a single-departure epoch is served with **zero**
+  demand frontier passes, counter-verified;
+* the engine flag (``set_engine`` / ``planner_engine`` /
+  ``REPRO_PLANNER_ENGINE``) actually switches engines and validates;
+* a refit calibration (model ``revision`` bump) orphans every cached DP
+  row — stale rows can never price a plan.
+"""
+
+import random
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import Block, HiDPPlanner, ModelDAG, PlannerConfig
+from repro.core import dp_partitioner as dp
+from repro.core.cost_model import Resource
+from repro.core.dp_cache import (PlannerWorkspace, reset_workspaces,
+                                 single_departure_masks, workspace_for)
+from repro.core.edge_models import (EDGE_MODELS, MODEL_DELTA, battery_cluster,
+                                    paper_cluster)
+from repro.core.hidp import plan_front, plan_to_dict
+from repro.fleet import FleetController
+from repro.fleet.traces import ChurnEvent, ChurnTrace
+from repro.profiling import CalibratedCostProvider, LearnedCostModel
+from repro.serving import PlanCache, SpeculativePrewarmer
+
+
+@pytest.fixture(autouse=True)
+def _fast_engine_and_cold_workspaces():
+    """Each test starts on the fast engine with cold workspaces and
+    restores whatever engine the session default was."""
+    prev = dp.get_engine()
+    dp.set_engine("fast")
+    reset_workspaces()
+    yield
+    dp.set_engine(prev)
+    reset_workspaces()
+
+
+# --------------------------------------------------------------------------
+# instance generators — trade-off-rich: rate and power anti-correlate, so
+# frontier cells genuinely grow and the event/general DP lanes execute
+# --------------------------------------------------------------------------
+
+def _tradeoff_resources(rng: random.Random, m: int) -> list[Resource]:
+    out = []
+    for i in range(m):
+        speed = rng.uniform(0.1, 1.0)
+        out.append(Resource(
+            name=f"r{i}", rate=speed * rng.uniform(1e10, 1e12),
+            bw=rng.uniform(1e6, 1e9), rtt=rng.uniform(0.0, 5e-3),
+            active_power=(1.2 - speed) * rng.uniform(5.0, 40.0),
+            idle_power=rng.uniform(0.05, 2.0)))
+    return out
+
+
+def _random_case(rng: random.Random):
+    n = rng.randint(2, 24)
+    blocks, bytes_in = [], rng.uniform(1e3, 1e7)
+    for i in range(n):
+        bytes_out = rng.uniform(1e3, 1e7)
+        blocks.append(Block(name=f"b{i}", flops=rng.uniform(1e6, 1e12),
+                            param_bytes=rng.uniform(1e3, 1e8),
+                            bytes_in=bytes_in, bytes_out=bytes_out,
+                            halo_fraction=rng.uniform(0.0, 0.2)))
+        bytes_in = bytes_out
+    dag = ModelDAG(name="h", blocks=tuple(blocks),
+                   input_bytes=blocks[0].bytes_in,
+                   output_bytes=blocks[-1].bytes_out)
+    return dag, _tradeoff_resources(rng, rng.randint(1, 6))
+
+
+@st.composite
+def cases(draw):
+    n = draw(st.integers(2, 24))
+    blocks, bytes_in = [], draw(st.floats(1e3, 1e7))
+    for i in range(n):
+        bytes_out = draw(st.floats(1e3, 1e7))
+        blocks.append(Block(name=f"b{i}", flops=draw(st.floats(1e6, 1e12)),
+                            param_bytes=draw(st.floats(1e3, 1e8)),
+                            bytes_in=bytes_in, bytes_out=bytes_out,
+                            halo_fraction=draw(st.floats(0, 0.2))))
+        bytes_in = bytes_out
+    dag = ModelDAG(name="h", blocks=tuple(blocks),
+                   input_bytes=blocks[0].bytes_in,
+                   output_bytes=blocks[-1].bytes_out)
+    m = draw(st.integers(1, 6))
+    resources = []
+    for i in range(m):
+        speed = draw(st.floats(0.1, 1.0))
+        resources.append(Resource(
+            name=f"r{i}", rate=speed * draw(st.floats(1e10, 1e12)),
+            bw=draw(st.floats(1e6, 1e9)), rtt=draw(st.floats(0, 5e-3)),
+            active_power=(1.2 - speed) * draw(st.floats(5.0, 40.0)),
+            idle_power=draw(st.floats(0.05, 2.0))))
+    wt = draw(st.booleans())
+    radio = draw(st.sampled_from([0.0, 0.7, 2.5]))
+    width = draw(st.sampled_from([2, 3, 4, 8]))
+    return dag, resources, wt, radio, width
+
+
+def _scalar_snapshot(p):
+    return (type(p).__name__, getattr(p, "boundaries", None),
+            getattr(p, "fractions", None), p.assignment,
+            p.predicted_latency)
+
+
+def _front_snapshot(front):
+    return [(pt.latency, pt.energy, _scalar_snapshot(pt.plan))
+            for pt in front]
+
+
+def _check_engines_agree(dag, resources, wt, radio, width):
+    with dp.planner_engine("reference"):
+        ref_scalar = dp.partition(dag, resources)
+        ref_front = _front_snapshot(dp.partition_front(
+            dag, resources, weight_transfer=wt, radio_power=radio,
+            width=width))
+    with dp.planner_engine("fast"):
+        reset_workspaces()
+        fast_scalar = dp.partition(dag, resources)
+        fast_front = _front_snapshot(dp.partition_front(
+            dag, resources, weight_transfer=wt, radio_power=radio,
+            width=width))
+    assert _scalar_snapshot(ref_scalar) == _scalar_snapshot(fast_scalar)
+    assert ref_front == fast_front
+
+
+# --------------------------------------------------------------------------
+# fast == reference, bit-identically
+# --------------------------------------------------------------------------
+
+def test_engines_bit_identical_seeded():
+    rng = random.Random(11)
+    for _ in range(30):
+        dag, resources = _random_case(rng)
+        wt = rng.random() < 0.5
+        radio = rng.choice([0.0, 0.7, 2.5])
+        width = rng.choice([2, 3, 4, 8])
+        _check_engines_agree(dag, resources, wt, radio, width)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cases())
+def test_engines_bit_identical_property(case):
+    _check_engines_agree(*case)
+
+
+def test_hierarchical_front_bit_identical_on_paper_models():
+    def snap(front):
+        out = []
+        for p in front:
+            d = plan_to_dict(p.plan)
+            d.pop("planning_seconds", None)
+            out.append((p.latency, p.energy, d))
+        return out
+
+    for cluster in (paper_cluster(), battery_cluster()):
+        for name, fn in EDGE_MODELS.items():
+            dag = fn()
+            cfg = PlannerConfig(delta=MODEL_DELTA[name])
+            with dp.planner_engine("reference"):
+                ref = snap(plan_front(dag, cluster, cfg))
+            with dp.planner_engine("fast"):
+                reset_workspaces()
+                fast = snap(plan_front(dag, cluster, cfg))
+            assert ref == fast, f"{name} diverged on {cluster!r}"
+
+
+# --------------------------------------------------------------------------
+# incremental epoch re-planning
+# --------------------------------------------------------------------------
+
+def test_incremental_replan_is_byte_identical_and_reuses_rows():
+    cluster = paper_cluster()
+    dag = EDGE_MODELS["resnet152"]()
+    planner = HiDPPlanner()
+    masks = single_departure_masks(cluster)
+    assert len(masks) == len(cluster.nodes)
+
+    def snap(front):
+        out = []
+        for p in front:
+            d = plan_to_dict(p.plan)
+            d.pop("planning_seconds", None)
+            out.append((p.latency, p.energy, d))
+        return out
+
+    # cold per membership: a fresh workspace for every mask
+    cold = {}
+    for mask in masks:
+        reset_workspaces()
+        cold[mask] = snap(planner.front(
+            dag, cluster.with_availability(list(mask))))
+
+    # warm: one workspace survives the full pass + every departure + the
+    # return — plans must be byte-identical to the cold ones throughout
+    reset_workspaces()
+    ws = workspace_for(None)
+    planner.front(dag, cluster)                     # full membership
+    rows_before = ws.rows_reused
+    for mask in masks:                              # each departure...
+        assert snap(planner.front(
+            dag, cluster.with_availability(list(mask)))) == cold[mask]
+    full_again = planner.front(dag, cluster)        # ...and the return
+    assert ws.rows_reused > rows_before, \
+        "epoch re-plans recomputed every DP row — nothing was incremental"
+    reset_workspaces()
+    assert snap(full_again) == snap(planner.front(dag, cluster))
+
+
+def test_prewarmed_departure_epoch_needs_zero_demand_dp():
+    cluster = paper_cluster()
+    gone = cluster.nodes[1].name
+    trace = ChurnTrace([ChurnEvent(time=5.0, node=gone, kind="leave"),
+                        ChurnEvent(time=9.0, node=gone, kind="join")])
+    ctrl = FleetController(cluster, trace)
+    cache = PlanCache(HiDPPlanner(), cluster, membership_source=ctrl)
+    pw = SpeculativePrewarmer(cache, ctrl)
+    tenants = [(fn(), MODEL_DELTA[name]) for name, fn in EDGE_MODELS.items()]
+
+    for dag, delta in tenants:
+        cache.front(dag, delta=delta)               # demand, full membership
+    assert cache.misses == len(tenants)
+    assert pw.prime() == len(tenants) * len(cluster.nodes)
+
+    misses0 = cache.misses
+    ctrl.advance(5.0)                               # the departure epoch
+    for dag, delta in tenants:
+        cache.front(dag, delta=delta)
+    assert cache.misses == misses0, "departure epoch paid a demand DP pass"
+    assert cache.prewarm_hits == len(tenants)
+    assert cache.prewarm_misses == 0
+
+    ctrl.advance(9.0)                               # the return epoch
+    for dag, delta in tenants:
+        cache.front(dag, delta=delta)
+    assert cache.misses == misses0, "returning membership was not warm"
+
+    s = cache.stats()
+    assert s["prewarm_hits"] == len(tenants)
+    assert s["prewarmed"] == pw.fronts_built
+    assert pw.epochs_seen == 2
+
+
+def test_prewarm_emits_spans_and_promotion_counters():
+    from repro.telemetry import TelemetryRecorder
+    tel = TelemetryRecorder("t")
+    cluster = paper_cluster()
+    gone = cluster.nodes[0].name
+    ctrl = FleetController(
+        cluster, ChurnTrace([ChurnEvent(time=1.0, node=gone, kind="leave")]))
+    cache = PlanCache(HiDPPlanner(), cluster, membership_source=ctrl,
+                      telemetry=tel)
+    SpeculativePrewarmer(cache, ctrl)
+    dag = EDGE_MODELS["vgg19"]()
+    cache.front(dag)
+    cache.prewarm()
+    ctrl.advance(1.0)
+    cache.front(dag)
+    names = [e.name for e in tel.events]
+    assert names.count("plan.prewarm") == cache.prewarmed
+    assert "plan_cache.prewarm_hit" in names
+    # the departure epoch itself never triggered a demand frontier pass
+    assert (names.count("plan.frontier_pass")
+            == 1 + names.count("plan_cache.prewarm_miss"))
+
+
+def test_prewarm_inserts_are_first_eviction_victims():
+    from repro.serving import LRUEviction
+    cluster = paper_cluster()
+    cache = PlanCache(HiDPPlanner(), cluster,
+                      eviction=LRUEviction(max_entries=3))
+    dag_a, dag_b = EDGE_MODELS["vgg19"](), EDGE_MODELS["inceptionv3"]()
+    cache.front(dag_a)
+    cache.front(dag_b)
+    cache.prewarm(dags=[dag_a, dag_b])       # 2 tenants x 5 masks, cap 3
+    tenants_left = cache.tenants()
+    assert len(tenants_left) == 3
+    # both demand entries survived; only speculative fronts were dropped
+    assert cache.front(dag_a) is not None and cache.misses == 2
+    assert cache.front(dag_b) is not None and cache.misses == 2
+
+
+# --------------------------------------------------------------------------
+# engine flag + workspace invalidation
+# --------------------------------------------------------------------------
+
+def test_engine_flag_switches_and_validates():
+    assert dp.get_engine() == "fast"
+    prev = dp.set_engine("reference")
+    assert prev == "fast" and dp.get_engine() == "reference"
+    with dp.planner_engine("fast"):
+        assert dp.get_engine() == "fast"
+    assert dp.get_engine() == "reference"
+    with pytest.raises(ValueError):
+        dp.set_engine("warp")
+
+
+def test_reference_engine_never_touches_workspaces():
+    cluster = paper_cluster()
+    dag = EDGE_MODELS["vgg19"]()
+    ws = workspace_for(None)
+    with dp.planner_engine("reference"):
+        HiDPPlanner().front(dag, cluster)
+    assert ws.stats()["rows_computed"] == 0
+    assert len(ws.front_rows) == 0 and len(ws.results) == 0
+
+
+def test_model_revision_bump_orphans_cached_rows():
+    model = LearnedCostModel()
+    model.observe("edge", "conv", 1e9, 1e6, 0.01)
+    prov = CalibratedCostProvider(model)
+    dag, resources = _random_case(random.Random(3))
+    dp.partition_front(dag, resources, provider=prov)
+    ws = workspace_for(prov)
+    assert ws is not None and len(ws.front_rows) > 0
+    rev0 = ws.revision
+    model.observe("edge", "conv", 2e9, 1e6, 0.02)   # refit → revision bump
+    ws2 = workspace_for(prov)
+    assert ws2 is ws and ws2.revision != rev0
+    assert len(ws2.front_rows) == 0, "stale rows survived a calibration move"
+
+
+def test_single_departure_masks_shape():
+    cluster = paper_cluster()
+    masks = single_departure_masks(cluster)
+    n = len(cluster.nodes)
+    assert len(masks) == n
+    for mask in masks:
+        assert sum(mask) == n - 1
+    # a one-node fleet has no single-departure neighbours (never empty it)
+    lone = cluster.with_availability([True] + [False] * (n - 1))
+    assert single_departure_masks(lone) == []
+
+
+def test_workspace_lru_bounds_and_mask_cache():
+    ws = PlannerWorkspace()
+    for i in range(40):
+        _ = ws.valid_mask(i)
+    assert len(ws._masks) <= 33
+    m = ws.valid_mask(4)
+    assert m.shape == (5, 5) and m[0, 1] and not m[1, 1] and not m[1, 0]
