@@ -48,8 +48,11 @@ HORIZON = 100.0
 
 
 def _workload(mix: tuple[str, ...]) -> list[tuple]:
-    """Saturating open-loop stream: round-robin requests of the mix,
-    arrival spacing well under service time."""
+    """Closed 400-request replay: round-robin over the mix at fixed 0.2 s
+    spacing (well under service time, so the backlog saturates the
+    cluster).  This is the paper's fig7 protocol — a finite request list
+    measured to completion.  True *open-loop* arrivals (unbounded streams,
+    admission control, shedding) are fig9's job: ``repro.load``."""
     names = list(itertools.islice(itertools.cycle(mix), 400))
     return [(0.2 * i, EDGE_MODELS[n](), MODEL_DELTA[n])
             for i, n in enumerate(names)]

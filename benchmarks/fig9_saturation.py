@@ -1,0 +1,252 @@
+"""Fig. 9 — open-loop saturation curves (the fig7/fig8 companion).
+
+Fig7 replays a *closed* request list; fig8 replays it under churn.  Fig9
+asks the open-loop question both dodge: what happens when arrivals keep
+coming whether or not the cluster keeps up?  One seeded Poisson trace is
+replayed at a ladder of offered-load factors through ``repro.load`` —
+plan-priced service (the planner's own ``predicted_latency`` via the
+membership-keyed ``PlanCache``), bounded queues, SLO-aware priorities,
+WDRR fairness, and shedding.
+
+Exit-code gates (each ``assert`` fails the CI step):
+
+* **static sweep** (fig7 variant) — below the knee, throughput tracks
+  offered load and nothing is turned away; above it, lane utilization
+  pins near 1 (and never exceeds it — no scheduler outruns physics),
+  throughput plateaus at or below the cluster's service capacity, the
+  excess shows up as rejects/sheds, and every *served* request still
+  meets its SLO (doomed-shedding), keeping p99 bounded;
+* **churn composition** (fig8 variant) — an arrival trace composed with
+  a ``FleetController`` churn trace re-prices service exactly once per
+  tenant per membership epoch (``PlanCache.stats()``-verified), engages
+  backpressure instead of deadlocking when capacity drops, and two
+  seeded replays emit byte-identical canonical telemetry;
+* **scale** — one seeded run pushes ≥ 10⁵ requests through the
+  vectorized event loop with full per-decision telemetry, replays
+  byte-identically, and the ``RunStore``-style counters reconstruct the
+  run's own conservation terms from the event log alone.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import HiDPPlanner
+from repro.core.edge_models import EDGE_MODELS, MODEL_DELTA, paper_cluster
+from repro.fleet import ChurnTrace, FleetController
+from repro.load import (ArrivalTrace, FixedServiceModel, LoadConfig,
+                        OpenLoopHarness, PlanServiceModel, TenantSpec,
+                        saturation_sweep)
+from repro.serving import PlanCache
+from repro.telemetry import TelemetryRecorder
+
+from .common import emit
+
+TENANTS = ("resnet152", "vgg19")
+FACTORS = (0.5, 1.0, 1.5, 2.0, 4.0, 8.0)
+TARGET_RHO = 0.3          # per-tenant utilization at factor 1.0
+
+
+def _plan_priced(telemetry=None, fleet=None):
+    """Specs + service model priced by the planner's own predictions."""
+    cluster = paper_cluster()
+    cache = PlanCache(HiDPPlanner(), cluster, membership_source=fleet,
+                      telemetry=telemetry)
+    specs = {}
+    for i, name in enumerate(TENANTS):
+        specs[name] = TenantSpec(name, weight=2.0 if i == 0 else 1.0,
+                                 dag=EDGE_MODELS[name](),
+                                 delta=MODEL_DELTA[name])
+    model = PlanServiceModel(cache, specs)
+    svc = {n: model.service_time(n) for n in TENANTS}
+    # SLO = 4x solo service; doomed-shedding then guarantees served
+    # requests meet it
+    specs = {n: TenantSpec(n, slo=4.0 * svc[n], weight=s.weight,
+                           dag=s.dag, delta=s.delta)
+             for n, s in specs.items()}
+    model = PlanServiceModel(cache, specs)
+    return specs, model, svc, cache
+
+
+def static_sweep() -> dict:
+    """The fig7 variant: one seeded trace, six offered-load levels, a
+    static full cluster."""
+    specs, model, svc, cache = _plan_priced()
+    # rate_i = ρ/s_i puts each tenant at utilization ρ when factor=1
+    rates = {n: TARGET_RHO / svc[n] for n in TENANTS}
+    horizon = 400.0 * max(svc.values())
+    trace = ArrivalTrace.poisson(rates, horizon, seed=42)
+    cfg = LoadConfig(queue_capacity=64)
+    capacity = 1.0 / min(svc.values())     # requests/s if only cheap work
+    print("== fig9a: open-loop saturation, static cluster ==")
+    print(f"service: " + ", ".join(f"{n}={svc[n]:.3f}s" for n in TENANTS)
+          + f"; base offered {trace.offered_rate():.4f}/s over "
+            f"{horizon:.0f}s ({len(trace)} arrivals)")
+    print(f"{'factor':>7}{'offered/s':>11}{'thr/s':>9}{'util':>7}"
+          f"{'p50':>8}{'p99':>8}{'loss':>7}{'viol':>6}")
+    points = saturation_sweep(trace, specs, model, FACTORS, cfg)
+    rows = []
+    for p in points:
+        r = p.report
+        util = r.utilization()
+        viol = r.slo_violations()
+        print(f"{p.factor:7.2g}{p.offered:11.4f}{p.throughput:9.4f}"
+              f"{util:7.3f}{p.p50:8.3f}{p.p99:8.3f}{p.loss_rate:7.3f}"
+              f"{viol:6d}")
+        emit(f"fig9/static/x{p.factor:g}", 1e6 * p.p99,
+             f"offered={p.offered:.4f};thr={p.throughput:.4f};"
+             f"util={util:.3f};loss={p.loss_rate:.3f};viol={viol}")
+        rows.append(p.row() | {"utilization": util})
+        # physics: no point may deliver more service than the lanes hold,
+        # and served throughput is bounded by the cheapest-work capacity
+        assert util <= 1.0 + 1e-9, f"utilization {util} > 1 at x{p.factor}"
+        assert p.throughput <= capacity * 1.01
+        # doomed-shedding: every *served* request meets its SLO, which
+        # also bounds p99 of the served traffic below the loosest SLO
+        assert viol == 0, f"{viol} served-SLO violations at x{p.factor}"
+        assert p.p99 <= max(s.slo for s in specs.values()) + 1e-9
+        assert r.conservation_ok()
+
+    below, above = points[0], points[-1]
+    # below the knee: the queue never fills (no rejects) and at most a
+    # stray burst-tail shed; throughput tracks offered load
+    assert below.report.rejected == 0
+    assert below.loss_rate <= 0.02
+    assert below.throughput >= 0.97 * below.offered
+    # above it: lanes saturate and the excess is turned away, accounted
+    assert above.report.utilization() > 0.9
+    assert above.loss_rate > 0.2
+    assert above.report.rejected + above.report.shed > 0
+    # the plateau: doubling offered load past saturation barely moves
+    # delivered service
+    u4 = points[-2].report.utilization()
+    u8 = above.report.utilization()
+    assert abs(u8 - u4) < 0.05, f"no plateau: util {u4} -> {u8}"
+    # the static membership is planned once per tenant, ever: every load
+    # level re-reads the same cached frontier pass
+    assert cache.stats()["misses"] == len(TENANTS), \
+        "static sweep must run one frontier pass per tenant, total"
+    print("PASS: saturation knee, plateau, and served-SLO gates hold")
+    return {"rows": rows, "capacity": capacity}
+
+
+def churn_composition() -> dict:
+    """The fig8 variant: the same open-loop trace composed with a churn
+    trace — membership epochs re-price service mid-run."""
+    def one_run(tag):
+        rec = TelemetryRecorder(tag)
+        cluster = paper_cluster()
+        # price the full cluster once (untelemetered) to scale the churn
+        # timeline in service-time units
+        _, _, svc, _ = _plan_priced()
+        s = max(svc.values())
+        churn = ChurnTrace.scripted([(1.0 * s, "tx2", "crash"),
+                                     (3.0 * s, "nano", "leave"),
+                                     (6.0 * s, "tx2", "join")])
+        fleet = FleetController(cluster, churn, telemetry=rec)
+        # rebuild the cache/model membership-keyed to this fleet
+        specs, model, svc, cache = _plan_priced(telemetry=rec, fleet=fleet)
+        # 4x the per-tenant target utilization: saturated by design
+        rates = {n: 4.0 * TARGET_RHO / svc[n] for n in TENANTS}
+        trace = ArrivalTrace.poisson(rates, 10.0 * s, seed=7)
+        h = OpenLoopHarness(trace, specs, model,
+                            LoadConfig(queue_capacity=8),
+                            fleet=fleet, telemetry=rec)
+        rep = h.run()
+        return rep, h, model, cache, fleet, rec
+
+    rep, h, model, cache, fleet, rec = one_run("fig9b-a")
+    stats = cache.stats()
+    print("\n== fig9b: saturation under churn (crash + leave + return) ==")
+    print(f"{rep!r}; epochs={h.epochs_seen}; resolutions="
+          f"{model.resolutions}; cache={{hits: {stats['hits']}, "
+          f"misses: {stats['misses']}}}")
+    emit("fig9/churn/run", 1e6 * rep.percentile(99),
+         f"completed={rep.completed};rejected={rep.rejected};"
+         f"shed={rep.shed};epochs={h.epochs_seen};"
+         f"resolutions={model.resolutions}")
+    assert rep.conservation_ok()
+    assert rep.queued == rep.in_flight == 0, "drained — no deadlock"
+    assert h.epochs_seen >= 2, "churn events must land mid-run"
+    # one plan resolution per tenant per membership epoch, never more
+    # (+ len(TENANTS) gets from the setup pricing pass, warm by then)
+    assert model.resolutions == len(TENANTS) * (1 + h.epochs_seen)
+    assert stats["hits"] + stats["misses"] \
+        == model.resolutions + len(TENANTS)
+    # frontier passes only for never-seen memberships: full, crash,
+    # crash+leave, and the post-join mask (nano still out) = 4 distinct
+    assert stats["misses"] == len(TENANTS) * 4
+    # the degraded membership forces backpressure: losses while degraded
+    assert rep.rejected + rep.shed > 0, "backpressure never engaged"
+
+    rep2, h2, model2, cache2, fleet2, rec2 = one_run("fig9b-b")
+    lines = [e.canonical() for e in rec.events]
+    lines2 = [e.canonical() for e in rec2.events]
+    assert lines and lines == lines2, \
+        "churn-composed replays are not byte-identical"
+    print(f"PASS: one pass/tenant/epoch, backpressure engaged, "
+          f"{len(lines)} canonical events byte-identical across replays")
+    return {"epochs": h.epochs_seen, "resolutions": model.resolutions,
+            "events": len(lines)}
+
+
+def scale_gate(n_target: int = 100_000) -> dict:
+    """≥ 1e5 requests through the vectorized event loop, twice, with full
+    per-decision telemetry — byte-identical, and the event log alone
+    reconstructs the conservation terms."""
+    rates = {"interactive": 1500.0, "batch": 800.0}
+    horizon = (n_target * 1.05) / sum(rates.values())
+    svc = FixedServiceModel({"interactive": 0.0004, "batch": 0.0006})
+    specs = [TenantSpec("interactive", slo=0.2, weight=2.0),
+             TenantSpec("batch", slo=0.5)]
+    cfg = LoadConfig(queue_capacity=256, max_wait=0.25)
+
+    def one_run(tag):
+        rec = TelemetryRecorder(tag)
+        trace = ArrivalTrace.poisson(rates, horizon, seed=1)
+        t0 = time.perf_counter()
+        rep = OpenLoopHarness(trace, specs, svc, cfg,
+                              telemetry=rec).run()
+        return rep, rec, time.perf_counter() - t0
+
+    rep, rec, dt = one_run("fig9c-a")
+    print(f"\n== fig9c: scale gate ==\n{rep.arrived} arrivals simulated in "
+          f"{dt:.2f}s wall ({rep.arrived / dt:,.0f} req/s); {rep!r}")
+    emit("fig9/scale/run", 1e6 * dt / max(rep.arrived, 1),
+         f"arrived={rep.arrived};completed={rep.completed};"
+         f"wall_s={dt:.2f}")
+    assert rep.arrived >= n_target, \
+        f"scale gate needs >= {n_target} requests, got {rep.arrived}"
+    assert rep.conservation_ok()
+    assert rep.utilization() <= 1.0 + 1e-9
+
+    # the event log alone reconstructs the conservation story
+    totals = {"load.admit": 0, "load.reject": 0, "load.shed": 0}
+    for e in rec.events:
+        if e.name in totals:
+            totals[e.name] += 1
+    assert totals["load.admit"] == rep.admitted
+    assert totals["load.reject"] == rep.rejected
+    assert totals["load.shed"] == rep.shed
+    assert sum(totals.values()) == rep.arrived
+
+    rep2, rec2, _ = one_run("fig9c-b")
+    assert [e.canonical() for e in rec.events] \
+        == [e.canonical() for e in rec2.events], \
+        "1e5-request replays are not byte-identical"
+    print(f"PASS: {rep.arrived} requests, {len(rec.events)} events "
+          f"reconstruct conservation and replay byte-identically")
+    return {"arrived": rep.arrived, "wall_s": dt,
+            "events": len(rec.events)}
+
+
+def main() -> dict:
+    out = {"static": static_sweep(),
+           "churn": churn_composition(),
+           "scale": scale_gate()}
+    print("\nfig9: all saturation gates PASS")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -23,8 +23,8 @@ import time
 def main(argv: list[str] | None = None) -> int:
     from . import (common, fig1_partition_sweep, fig5_latency_energy,
                    fig6_gflops_timeline, fig7_throughput_mixes,
-                   fig8_node_scaling, roofline, tab1_planner_overhead,
-                   tab2_calibration_accuracy)
+                   fig8_node_scaling, fig9_saturation, roofline,
+                   tab1_planner_overhead, tab2_calibration_accuracy)
 
     suites = {
         "fig1": fig1_partition_sweep.main,
@@ -32,6 +32,7 @@ def main(argv: list[str] | None = None) -> int:
         "fig6": fig6_gflops_timeline.main,
         "fig7": fig7_throughput_mixes.main,
         "fig8": fig8_node_scaling.main,
+        "fig9": fig9_saturation.main,
         "tab1": tab1_planner_overhead.main,
         "tab2": tab2_calibration_accuracy.main,
         "roofline": roofline.main,

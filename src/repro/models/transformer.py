@@ -32,6 +32,26 @@ from .config import ArchConfig
 CACHE_DTYPE = jnp.bfloat16
 
 
+@jax.custom_vjp
+def _pinned(x):
+    """``optimization_barrier`` with a differentiation rule: the primitive
+    itself has none, so grad tracing through the scan carry would raise —
+    the VJP barriers the cotangent identically, keeping the backward
+    residual stream pinned in bf16 too."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _pinned_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _pinned_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_pinned.defvjp(_pinned_fwd, _pinned_bwd)
+
+
 # --------------------------------------------------------------------------
 # Parameter construction
 # --------------------------------------------------------------------------
@@ -231,7 +251,7 @@ def forward(cfg: ArchConfig, params: dict, tokens: jax.Array, *,
         # the barrier pins the checkpointed carry in bf16: without it XLA
         # hoists the backward pass's f32 convert out of the loop and
         # materialises an f32 copy of the whole residual stack (§Perf B)
-        carry = jax.lax.optimization_barrier(carry)
+        carry = _pinned(carry)
         return jax.lax.scan(body, carry, xs_g)
 
     if remat:

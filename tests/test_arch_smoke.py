@@ -45,6 +45,7 @@ def test_forward_shapes_and_finite(arch, rng):
     assert bool(jnp.isfinite(logits).all()), aid
 
 
+@pytest.mark.slow
 def test_train_step_decreases_loss(arch, rng):
     aid, cfg, model, params = arch
     plan = ShardingPlan(arch=aid, shape="smoke", mesh=SINGLE_POD,

@@ -1,0 +1,618 @@
+"""repro.load — the open-loop queueing contracts (docs/load.md):
+
+* arrival traces are seeded and replayable, per-tenant streams are
+  independent, and the operators (merge / scaled / window) preserve the
+  arrival sequence;
+* queueing invariants: **request conservation** (arrived = admitted +
+  rejected + shed; admitted = completed + in-flight), per-tenant FIFO (no
+  reordering within a priority class's tenant stream), strict priority
+  across classes, WDRR fairness bounds within a class, utilization ≤ 1;
+* admission control rejects at the bounded queue, shedding bounds both
+  queue age (``max_wait``) and doomed-SLO dispatches;
+* two seeded replays emit **byte-identical** canonical telemetry, and the
+  ``RunStore`` reconstructs the harness's own counts from the event log;
+* composing an arrival trace with a churn trace keeps the
+  one-frontier-pass-per-tenant-per-epoch invariant (counter-verified via
+  ``PlanCache.stats()``) and engages backpressure instead of deadlocking
+  when capacity drops below offered load.
+
+Property-based tests run under hypothesis when installed and are paired
+with seeded ``random.Random`` fallback loops that always run.
+"""
+
+import math
+import random
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.load import (ArrivalTrace, FixedServiceModel, LoadConfig,
+                        OpenLoopHarness, TenantSpec, mix_capacity,
+                        saturation_sweep)
+from repro.load.harness import derive_priorities
+
+
+# --------------------------------------------------------------------------
+# arrival traces
+# --------------------------------------------------------------------------
+
+RATES = {"chat": 20.0, "batch": 10.0}
+
+
+def test_poisson_trace_is_seeded_and_replayable():
+    a = ArrivalTrace.poisson(RATES, horizon=20.0, seed=3)
+    b = ArrivalTrace.poisson(RATES, horizon=20.0, seed=3)
+    assert np.array_equal(a.times, b.times)
+    assert np.array_equal(a.tenant_ids, b.tenant_ids)
+    c = ArrivalTrace.poisson(RATES, horizon=20.0, seed=4)
+    assert not np.array_equal(a.times, c.times)
+    # sorted, windowed, frozen
+    assert np.all(np.diff(a.times) >= 0)
+    assert a.times[-1] < 20.0
+    with pytest.raises(ValueError):
+        a.times[0] = -1.0
+
+
+def test_poisson_offered_rates_match_requested():
+    tr = ArrivalTrace.poisson(RATES, horizon=200.0, seed=0)
+    got = tr.offered_rates()
+    for name, rate in RATES.items():
+        assert got[name] == pytest.approx(rate, rel=0.15)
+    assert tr.offered_rate() == pytest.approx(sum(RATES.values()), rel=0.1)
+
+
+def test_per_tenant_streams_are_independent():
+    """Adding a tenant must not perturb another tenant's arrivals."""
+    a = ArrivalTrace.poisson({"chat": 20.0}, horizon=20.0, seed=3)
+    b = ArrivalTrace.poisson({"chat": 20.0, "extra": 5.0}, horizon=20.0,
+                             seed=3)
+    chat_b = b.times[b.tenant_ids == b.tenants.index("chat")]
+    assert np.array_equal(a.times, chat_b)
+
+
+def test_diurnal_trace_swings_between_trough_and_peak():
+    tr = ArrivalTrace.diurnal({"t": 10.0}, horizon=100.0, seed=1,
+                              peak_factor=5.0, period=100.0, phase=0.0)
+    # λ(t) ∝ 1 − cos(2πt/period): trough at t=0, peak at t=period/2
+    trough = len(tr.window(0.0, 20.0))
+    peak = len(tr.window(40.0, 60.0))
+    assert peak > 2 * trough
+    with pytest.raises(ValueError, match="peak_factor"):
+        ArrivalTrace.diurnal({"t": 1.0}, 10.0, peak_factor=0.5)
+
+
+def test_burst_trace_is_overdispersed():
+    """An MMPP's per-second counts have a variance/mean ratio well above
+    the Poisson process's 1."""
+    horizon = 400.0
+    burst = ArrivalTrace.burst({"t": 10.0}, horizon, seed=2,
+                               burst_factor=8.0)
+    plain = ArrivalTrace.poisson({"t": burst.offered_rate()}, horizon,
+                                 seed=2)
+
+    def dispersion(tr):
+        counts = np.bincount(tr.times.astype(np.int64),
+                             minlength=int(horizon))
+        return counts.var() / counts.mean()
+
+    assert dispersion(plain) < 1.5
+    assert dispersion(burst) > 2.0
+    with pytest.raises(ValueError, match="rate states"):
+        ArrivalTrace.mmpp({"t": 1.0}, 10.0, state_factors=(1.0,))
+
+
+def test_merge_pools_same_named_tenants_and_stays_sorted():
+    a = ArrivalTrace.poisson({"x": 5.0, "y": 2.0}, horizon=10.0, seed=0)
+    b = ArrivalTrace.poisson({"y": 3.0, "z": 1.0}, horizon=15.0, seed=9)
+    m = a.merge(b)
+    assert m.tenants == ("x", "y", "z")
+    assert m.horizon == 15.0
+    assert len(m) == len(a) + len(b)
+    assert np.all(np.diff(m.times) >= 0)
+    counts = m.counts()
+    assert counts["y"] == a.counts()["y"] + b.counts()["y"]
+
+
+def test_scaled_compresses_time_and_multiplies_offered_load():
+    tr = ArrivalTrace.poisson(RATES, horizon=20.0, seed=3)
+    s = tr.scaled(4.0)
+    assert np.allclose(s.times, tr.times / 4.0)
+    assert np.array_equal(s.tenant_ids, tr.tenant_ids)
+    assert s.horizon == tr.horizon / 4.0
+    assert s.offered_rate() == pytest.approx(4.0 * tr.offered_rate())
+    with pytest.raises(ValueError):
+        tr.scaled(0.0)
+
+
+def test_window_reanchors_at_zero():
+    tr = ArrivalTrace.poisson({"t": 10.0}, horizon=20.0, seed=1)
+    w = tr.window(5.0, 8.0)
+    assert w.horizon == 3.0
+    assert len(w) and w.times.min() >= 0.0 and w.times.max() < 3.0
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError, match="1-D"):
+        ArrivalTrace(np.zeros((2, 2)), np.zeros((2, 2), np.int32),
+                     ("a",), 1.0)
+    with pytest.raises(ValueError, match="outside tenants"):
+        ArrivalTrace(np.array([0.5]), np.array([3], np.int32), ("a",), 1.0)
+    # unsorted input is stably sorted, not rejected
+    tr = ArrivalTrace(np.array([2.0, 1.0]), np.array([0, 0], np.int32),
+                      ("a",), 3.0)
+    assert list(tr.times) == [1.0, 2.0]
+
+
+# --------------------------------------------------------------------------
+# queueing harness — deterministic unit tests
+# --------------------------------------------------------------------------
+
+def _scripted(times, ids, tenants, horizon):
+    return ArrivalTrace(np.asarray(times, float),
+                        np.asarray(ids, np.int32), tenants, horizon)
+
+
+def test_underload_completes_everything_within_slo():
+    tr = ArrivalTrace.poisson(RATES, horizon=30.0, seed=7)
+    svc = FixedServiceModel({"chat": 0.010, "batch": 0.030})
+    specs = [TenantSpec("chat", slo=0.25, weight=2.0),
+             TenantSpec("batch", slo=0.5)]
+    rep = OpenLoopHarness(tr, specs, svc).run()
+    assert rep.conservation_ok()
+    assert rep.completed == rep.arrived
+    assert rep.rejected == rep.shed == 0
+    assert rep.slo_violations() == 0
+    assert 0.0 < rep.utilization() < 1.0
+    pt = rep.per_tenant()
+    assert pt["chat"]["completed"] == tr.counts()["chat"]
+    assert pt["chat"]["p99"] <= 0.25
+
+
+def test_admission_control_rejects_when_queue_full():
+    tr = ArrivalTrace.poisson(RATES, horizon=10.0, seed=7).scaled(20.0)
+    svc = FixedServiceModel({"chat": 0.010, "batch": 0.030})
+    specs = [TenantSpec("chat", slo=1.0), TenantSpec("batch", slo=1.0)]
+    rep = OpenLoopHarness(tr, specs, svc,
+                          LoadConfig(queue_capacity=16,
+                                     shed_doomed=False)).run()
+    assert rep.conservation_ok()
+    assert rep.rejected > 0
+    assert rep.utilization() <= 1.0 + 1e-9
+
+
+def test_free_lane_is_never_rejected_even_with_zero_waiting_room():
+    tr = _scripted([0.0, 10.0], [0, 0], ("t",), 20.0)
+    rep = OpenLoopHarness(tr, [TenantSpec("t")],
+                          FixedServiceModel({"t": 1.0}),
+                          LoadConfig(queue_capacity=0)).run()
+    assert rep.completed == 2 and rep.rejected == 0
+
+
+def test_max_wait_bounds_every_admitted_requests_queue_age():
+    tr = ArrivalTrace.poisson(RATES, horizon=10.0, seed=7).scaled(10.0)
+    svc = FixedServiceModel({"chat": 0.010, "batch": 0.030})
+    specs = [TenantSpec("chat"), TenantSpec("batch")]
+    rep = OpenLoopHarness(tr, specs, svc,
+                          LoadConfig(max_wait=0.2)).run()
+    assert rep.conservation_ok()
+    assert rep.shed > 0
+    assert rep.waits().max() <= 0.2 + 1e-9
+
+
+def test_doomed_shedding_makes_served_traffic_meet_slo():
+    """With shed_doomed on, a dispatched request satisfies
+    wait + service <= slo, so no completed request violates."""
+    tr = ArrivalTrace.poisson(RATES, horizon=10.0, seed=7).scaled(10.0)
+    svc = FixedServiceModel({"chat": 0.010, "batch": 0.030})
+    specs = [TenantSpec("chat", slo=0.1), TenantSpec("batch", slo=0.3)]
+    rep = OpenLoopHarness(tr, specs, svc,
+                          LoadConfig(queue_capacity=128)).run()
+    assert rep.conservation_ok()
+    assert rep.shed > 0
+    assert rep.slo_violations() == 0
+
+
+def test_drain_false_leaves_backlog_accounted():
+    tr = _scripted([0.0, 0.0, 0.0, 0.0], [0] * 4, ("t",), 1.0)
+    rep = OpenLoopHarness(tr, [TenantSpec("t")],
+                          FixedServiceModel({"t": 10.0}),
+                          LoadConfig(drain=False)).run()
+    assert rep.conservation_ok()
+    assert rep.completed == 0 and rep.in_flight == 1 and rep.queued == 3
+    assert rep.admitted == 1
+
+
+def test_per_tenant_fifo_no_reordering():
+    """Within one tenant (hence within its priority class's stream),
+    dispatch order equals arrival order."""
+    tr = ArrivalTrace.poisson(RATES, horizon=10.0, seed=5).scaled(5.0)
+    svc = FixedServiceModel({"chat": 0.010, "batch": 0.030})
+    specs = [TenantSpec("chat", slo=0.5, weight=2.0),
+             TenantSpec("batch", slo=1.0)]
+    rep = OpenLoopHarness(tr, specs, svc,
+                          LoadConfig(queue_capacity=64)).run()
+    for ti in range(len(tr.tenants)):
+        starts = rep.start[(tr.tenant_ids == ti)
+                           & ~np.isnan(rep.start)]
+        assert np.all(np.diff(starts) >= 0)
+
+
+def test_strict_priority_across_classes():
+    """All tight-class requests dispatch before any loose-class one when
+    both are backlogged from t=0."""
+    n = 6
+    tr = _scripted([0.0] * (2 * n), [0] * n + [1] * n, ("hi", "lo"), 1.0)
+    specs = [TenantSpec("hi", priority=0), TenantSpec("lo", priority=1)]
+    rep = OpenLoopHarness(tr, specs, FixedServiceModel({"hi": 0.1,
+                                                        "lo": 0.1})).run()
+    hi_starts = rep.start[:n]
+    lo_starts = rep.start[n:]
+    assert hi_starts.max() < lo_starts.min()
+
+
+def test_slo_derived_priorities_and_explicit_override():
+    specs = [TenantSpec("a", slo=0.1), TenantSpec("b", slo=0.5),
+             TenantSpec("c"), TenantSpec("d", slo=9.0, priority=0)]
+    prio = derive_priorities(specs)
+    assert prio == {"a": 0, "b": 1, "c": 2, "d": 0}
+
+
+def test_wdrr_shares_service_by_weight_under_backlog():
+    """Two equally-priced tenants, weights 3:1, permanently backlogged:
+    completions interleave ~3:1 (within a quantum per round)."""
+    n = 400
+    tr = _scripted([0.0] * (2 * n), [0] * n + [1] * n, ("big", "small"),
+                   1.0)
+    specs = [TenantSpec("big", priority=0, weight=3.0),
+             TenantSpec("small", priority=0, weight=1.0)]
+    rep = OpenLoopHarness(tr, specs,
+                          FixedServiceModel({"big": 0.01,
+                                             "small": 0.01})).run()
+    # look at the first half of completions — both tenants still backlogged
+    order = np.argsort(rep.finish)
+    first = order[: n]
+    big = int(np.count_nonzero(tr.tenant_ids[first] == 0))
+    small = len(first) - big
+    assert small > 0
+    assert big / small == pytest.approx(3.0, rel=0.15)
+
+
+def test_wdrr_weights_do_not_starve_light_tenants():
+    tr = _scripted([0.0] * 40, [0] * 39 + [1], ("flood", "droplet"), 1.0)
+    specs = [TenantSpec("flood", priority=0, weight=1.0),
+             TenantSpec("droplet", priority=0, weight=1.0)]
+    rep = OpenLoopHarness(tr, specs,
+                          FixedServiceModel({"flood": 0.01,
+                                             "droplet": 0.01})).run()
+    # the droplet is served within its first DRR visit, not after the flood
+    droplet_start = rep.start[-1]
+    assert droplet_start <= 0.01 * 3 + 1e-9
+
+
+def test_mix_capacity_and_saturation_sweep_shape():
+    svc_times = {"chat": 0.010, "batch": 0.030}
+    cap = mix_capacity(svc_times, RATES)
+    assert cap == pytest.approx(60.0)
+    tr = ArrivalTrace.poisson(RATES, horizon=30.0, seed=7)
+    specs = [TenantSpec("chat", slo=0.15, weight=2.0),
+             TenantSpec("batch", slo=0.5)]
+    pts = saturation_sweep(tr, specs, FixedServiceModel(svc_times),
+                           [0.5, 1.0, 4.0],
+                           LoadConfig(queue_capacity=64, max_wait=1.0))
+    below, at, above = pts
+    # below the knee: throughput tracks offered load, nothing turned away
+    assert below.throughput == pytest.approx(below.offered, rel=0.02)
+    assert below.loss_rate == 0.0
+    # above it: lanes saturate, the excess is rejected/shed
+    assert above.report.utilization() > 0.95
+    assert above.loss_rate > 0.1
+    assert above.report.utilization() <= 1.0 + 1e-9
+    assert above.p99 >= below.p99
+    row = above.row()
+    assert row["arrived"] == float(above.report.arrived)
+
+
+def test_spec_and_config_validation():
+    with pytest.raises(ValueError, match="weight"):
+        TenantSpec("t", weight=0.0)
+    with pytest.raises(ValueError, match="slo"):
+        TenantSpec("t", slo=-1.0)
+    with pytest.raises(ValueError, match="servers"):
+        LoadConfig(servers=0)
+    with pytest.raises(ValueError, match="queue_capacity"):
+        LoadConfig(queue_capacity=-1)
+    tr = ArrivalTrace.poisson({"t": 1.0}, 5.0, seed=0)
+    with pytest.raises(ValueError, match="no TenantSpec"):
+        OpenLoopHarness(tr, [], FixedServiceModel({"t": 1.0}))
+    with pytest.raises(ValueError, match="positive"):
+        FixedServiceModel({"t": 0.0})
+
+
+def test_multi_server_utilization_and_speedup():
+    tr = ArrivalTrace.poisson({"t": 50.0}, horizon=20.0, seed=2)
+    svc = FixedServiceModel({"t": 0.05})          # offered ρ≈2.5 on 1 lane
+    one = OpenLoopHarness(tr, [TenantSpec("t")], svc,
+                          LoadConfig(servers=1, queue_capacity=32,
+                                     shed_doomed=False)).run()
+    four = OpenLoopHarness(tr, [TenantSpec("t")], svc,
+                           LoadConfig(servers=4, queue_capacity=32,
+                                      shed_doomed=False)).run()
+    assert four.completed > one.completed
+    assert four.utilization() <= 1.0 + 1e-9
+    assert four.throughput() <= 4.0 / 0.05 * 1.01
+
+
+# --------------------------------------------------------------------------
+# property-based invariants (hypothesis + seeded fallbacks)
+# --------------------------------------------------------------------------
+
+def _check_queueing_invariants(seed, rate_a, rate_b, factor, cap,
+                               max_wait, servers):
+    """The core property: for any load level and queue knobs, the harness
+    conserves requests, respects capacity physics, bounds admitted queue
+    age, and never reorders within a tenant."""
+    tr = ArrivalTrace.poisson({"a": rate_a, "b": rate_b}, horizon=5.0,
+                              seed=seed).scaled(factor)
+    svc = FixedServiceModel({"a": 0.004, "b": 0.011})
+    specs = [TenantSpec("a", slo=0.2, weight=2.0),
+             TenantSpec("b", slo=0.6)]
+    cfg = LoadConfig(servers=servers, queue_capacity=cap,
+                     max_wait=max_wait)
+    rep = OpenLoopHarness(tr, specs, svc, cfg).run()
+    assert rep.conservation_ok()
+    assert rep.queued == rep.in_flight == 0          # drained
+    assert rep.admitted == rep.completed
+    assert rep.utilization() <= 1.0 + 1e-9
+    if max_wait is not None and rep.admitted:
+        assert rep.waits().max() <= max_wait + 1e-9
+    assert rep.slo_violations() == 0                 # shed_doomed default
+    for ti in range(2):
+        starts = rep.start[(tr.tenant_ids == ti) & ~np.isnan(rep.start)]
+        assert np.all(np.diff(starts) >= 0)
+    return rep
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 16), st.floats(1.0, 60.0), st.floats(0.0, 40.0),
+       st.floats(0.25, 8.0), st.integers(0, 64),
+       st.one_of(st.none(), st.floats(0.05, 1.0)), st.integers(1, 4))
+def test_queueing_invariants_property(seed, rate_a, rate_b, factor, cap,
+                                      max_wait, servers):
+    _check_queueing_invariants(seed, rate_a, rate_b, factor, cap,
+                               max_wait, servers)
+
+
+def test_queueing_invariants_seeded_fallback():
+    """The same property as a seeded loop, exercised whether or not
+    hypothesis is installed."""
+    rng = random.Random(0xC0FFEE)
+    for _ in range(25):
+        _check_queueing_invariants(
+            seed=rng.randrange(2 ** 16),
+            rate_a=rng.uniform(1.0, 60.0),
+            rate_b=rng.uniform(0.0, 40.0),
+            factor=rng.uniform(0.25, 8.0),
+            cap=rng.randrange(0, 64),
+            max_wait=rng.choice([None, rng.uniform(0.05, 1.0)]),
+            servers=rng.randrange(1, 5))
+
+
+def _check_trace_identity(seed, rate, factor):
+    a = ArrivalTrace.poisson({"t": rate}, 5.0, seed=seed).scaled(factor)
+    b = ArrivalTrace.poisson({"t": rate}, 5.0, seed=seed).scaled(factor)
+    assert np.array_equal(a.times, b.times)
+    assert a.offered_rate() == b.offered_rate()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 16), st.floats(0.5, 80.0), st.floats(0.25, 8.0))
+def test_trace_identity_property(seed, rate, factor):
+    _check_trace_identity(seed, rate, factor)
+
+
+def test_trace_identity_seeded_fallback():
+    rng = random.Random(7)
+    for _ in range(25):
+        _check_trace_identity(rng.randrange(2 ** 16),
+                              rng.uniform(0.5, 80.0),
+                              rng.uniform(0.25, 8.0))
+
+
+def _check_wdrr_fairness_bound(w_big):
+    """Under permanent backlog of equally-priced tenants, the completion
+    split tracks the weight split to within one quantum per round."""
+    n = 300
+    tr = _scripted([0.0] * (2 * n), [0] * n + [1] * n, ("big", "small"),
+                   1.0)
+    specs = [TenantSpec("big", priority=0, weight=w_big),
+             TenantSpec("small", priority=0, weight=1.0)]
+    rep = OpenLoopHarness(tr, specs,
+                          FixedServiceModel({"big": 0.01,
+                                             "small": 0.01})).run()
+    order = np.argsort(rep.finish)[: n]
+    big = int(np.count_nonzero(tr.tenant_ids[order] == 0))
+    small = len(order) - big
+    assert small > 0
+    assert big / small == pytest.approx(w_big, rel=0.25)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(1.0, 6.0))
+def test_wdrr_fairness_property(w_big):
+    _check_wdrr_fairness_bound(w_big)
+
+
+def test_wdrr_fairness_seeded_fallback():
+    rng = random.Random(11)
+    for _ in range(6):
+        _check_wdrr_fairness_bound(rng.uniform(1.0, 6.0))
+
+
+
+# --------------------------------------------------------------------------
+# telemetry determinism + reconstruction
+# --------------------------------------------------------------------------
+
+def _telemetry_run(tmp_path, tag):
+    from repro.telemetry import RunStore, TelemetryRecorder
+    store = RunStore(tmp_path / tag)
+    rec = TelemetryRecorder(store.new_run("load"), store=store)
+    tr = ArrivalTrace.poisson(RATES, horizon=10.0, seed=13).scaled(8.0)
+    svc = FixedServiceModel({"chat": 0.010, "batch": 0.030})
+    specs = [TenantSpec("chat", slo=0.2, weight=2.0),
+             TenantSpec("batch", slo=0.6)]
+    rep = OpenLoopHarness(tr, specs, svc,
+                          LoadConfig(queue_capacity=32, max_wait=0.5),
+                          telemetry=rec).run()
+    rec.close()
+    return store, rec.run, rep
+
+
+def test_two_seeded_replays_emit_byte_identical_canonical_logs(tmp_path):
+    s1, run1, rep1 = _telemetry_run(tmp_path, "a")
+    s2, run2, rep2 = _telemetry_run(tmp_path, "b")
+    lines1 = s1.canonical_lines(run1)
+    lines2 = s2.canonical_lines(run2)
+    assert lines1 and lines1 == lines2
+    assert rep1.completed == rep2.completed
+    assert rep1.rejected == rep2.rejected and rep1.shed == rep2.shed
+
+
+def test_run_store_reconstructs_the_saturation_story(tmp_path):
+    """`RunStore` alone — no LoadReport — recovers every queue decision:
+    the load.admit/reject/shed counters match the report's conservation
+    terms, and queue_wait spans bound the admitted wait."""
+    store, run, rep = _telemetry_run(tmp_path, "solo")
+    assert store.counter_total(run, "load.admit") == rep.admitted
+    assert store.counter_total(run, "load.reject") == rep.rejected
+    assert store.counter_total(run, "load.shed") == rep.shed
+    total = (store.counter_total(run, "load.admit")
+             + store.counter_total(run, "load.reject")
+             + store.counter_total(run, "load.shed"))
+    assert total == rep.arrived                     # conservation, replayed
+    waits = [e.value for e in store.events(run, kind="span",
+                                           name="load.queue_wait")]
+    assert len(waits) == rep.admitted
+    assert max(waits) <= 0.5 + 1e-9                 # max_wait bound
+    by_tenant = store.by_tenant(run, "load.admit")
+    pt = rep.per_tenant()
+    for name, stats in pt.items():
+        assert by_tenant.get(name, 0.0) == stats["completed"]
+    # completion spans carry slo_violated for the SLO-rate reconstruction
+    reqs = store.events(run, kind="span", name="load.request")
+    assert len(reqs) == rep.completed
+    viol = sum(1 for e in reqs if e.attrs.get("slo_violated"))
+    assert viol == rep.slo_violations()
+
+
+# --------------------------------------------------------------------------
+# churn composition (arrival trace × churn trace)
+# --------------------------------------------------------------------------
+
+def _plan_priced_setup(churn_events, *, rates=None, horizon=8.0,
+                       factor=1.0, cap=32, telemetry=None):
+    from repro.core import HiDPPlanner
+    from repro.core.edge_models import (EDGE_MODELS, MODEL_DELTA,
+                                        paper_cluster)
+    from repro.fleet import ChurnTrace, FleetController
+    from repro.load import PlanServiceModel
+    from repro.serving import PlanCache
+
+    cluster = paper_cluster()
+    fleet = FleetController(cluster, ChurnTrace.scripted(churn_events),
+                            telemetry=telemetry)
+    cache = PlanCache(HiDPPlanner(), cluster, membership_source=fleet,
+                      telemetry=telemetry)
+    specs = {
+        "resnet": TenantSpec("resnet", slo=60.0, weight=2.0,
+                             dag=EDGE_MODELS["resnet152"](),
+                             delta=MODEL_DELTA["resnet152"]),
+        "vgg": TenantSpec("vgg", slo=90.0,
+                          dag=EDGE_MODELS["vgg19"](),
+                          delta=MODEL_DELTA["vgg19"]),
+    }
+    model = PlanServiceModel(cache, specs)
+    tr = ArrivalTrace.poisson(rates or {"resnet": 2.0, "vgg": 1.0},
+                              horizon=horizon, seed=5).scaled(factor)
+    h = OpenLoopHarness(tr, specs, model,
+                        LoadConfig(queue_capacity=cap, max_wait=200.0,
+                                   shed_doomed=False),
+                        fleet=fleet, telemetry=telemetry)
+    return h, model, cache, fleet
+
+
+def test_churn_composition_one_frontier_pass_per_tenant_per_epoch():
+    """A mid-run departure + return: the plan cache sees exactly one
+    resolution per tenant per membership epoch, frontier passes only for
+    never-seen memberships, warm hits for the returning one."""
+    h, model, cache, fleet = _plan_priced_setup(
+        [(2.0, "tx2", "crash"), (5.0, "tx2", "join")])
+    rep = h.run()
+    assert rep.conservation_ok()
+    assert h.epochs_seen == 2 and fleet.epoch == 2
+    # one cache.get per tenant per epoch (incl. epoch 0)
+    assert model.resolutions == 2 * (1 + h.epochs_seen)
+    stats = cache.stats()
+    assert stats["hits"] + stats["misses"] == model.resolutions
+    # 2 distinct memberships × 2 tenants planned; the return is warm
+    assert stats["misses"] == 4
+    assert stats["hits"] == 2
+
+
+def test_backpressure_engages_instead_of_deadlocking_under_capacity_drop():
+    """Drop most of the cluster mid-run while offered load is near the
+    full-cluster capacity: service re-prices upward, the bounded queue
+    must overflow into rejects (not hang), and the run must terminate
+    with conservation intact."""
+    from repro.core.edge_models import paper_cluster
+    names = [n.name for n in paper_cluster().nodes]
+    # keep only the first node after t=1.0
+    events = [(1.0, n, "leave") for n in names[1:]]
+    h, model, cache, fleet = _plan_priced_setup(
+        events, rates={"resnet": 4.0, "vgg": 2.0}, horizon=6.0,
+        cap=8)
+    rep = h.run()
+    assert rep.conservation_ok()
+    assert rep.queued == rep.in_flight == 0        # drained — no deadlock
+    assert rep.rejected > 0                        # backpressure engaged
+    assert rep.utilization() <= 1.0 + 1e-9
+    assert h.epochs_seen >= 1
+    # degraded membership re-priced service upward
+    assert model.resolutions >= 4
+
+
+def test_churn_composed_replays_are_byte_identical():
+    from repro.telemetry import TelemetryRecorder
+
+    def one(run):
+        rec = TelemetryRecorder(run)
+        h, model, cache, fleet = _plan_priced_setup(
+            [(2.0, "tx2", "crash"), (5.0, "tx2", "join")], telemetry=rec)
+        rep = h.run()
+        return [e.canonical() for e in rec.events], rep
+
+    l1, r1 = one("c1")
+    l2, r2 = one("c2")
+    assert l1 and l1 == l2
+    assert r1.completed == r2.completed
+
+
+# --------------------------------------------------------------------------
+# scale (the 1e5-request acceptance floor)
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_hundred_thousand_requests_through_the_event_loop():
+    tr = ArrivalTrace.poisson({"a": 1500.0, "b": 800.0}, horizon=50.0,
+                              seed=1)
+    assert len(tr) >= 100_000
+    rep = OpenLoopHarness(
+        tr, [TenantSpec("a", slo=0.2, weight=2.0),
+             TenantSpec("b", slo=0.4)],
+        FixedServiceModel({"a": 0.0004, "b": 0.0006}),
+        LoadConfig(queue_capacity=256, max_wait=0.5)).run()
+    assert rep.conservation_ok()
+    assert rep.completed >= 90_000
+    assert rep.utilization() <= 1.0 + 1e-9
+    assert math.isfinite(rep.percentile(99))

@@ -138,6 +138,7 @@ def test_synthetic_data_deterministic():
     assert a["tokens"].min() >= 0 and a["tokens"].max() < cfg.vocab
 
 
+@pytest.mark.slow
 def test_microbatch_equivalence(rng):
     """micro=2 grad-accumulated step == micro=1 step (same loss & params)."""
     cfg = get_config("gemma-2b").reduced()
