@@ -26,6 +26,14 @@ MODELS = tuple(EDGE_MODELS)
 # repro.telemetry.TelemetryRecorder); None keeps emit() print-only.
 RECORDER = None
 
+# Every emit() of the current process accumulates here (last write per
+# name wins): ``{name: {"value", "unit", "direction"}}`` — the rows
+# ``benchmarks/run.py --bench-json`` snapshots via
+# ``repro.telemetry.regress``.  Unit "us" marks machine-dependent wall
+# time (reported, never gated); "sim_us"/"ratio"/"count" mark
+# deterministic domain quantities the regression diff gates on.
+METRICS: dict[str, dict] = {}
+
 
 def timed(fn: Callable, *args, repeat: int = 3) -> tuple[float, object]:
     best, out = float("inf"), None
@@ -36,8 +44,11 @@ def timed(fn: Callable, *args, repeat: int = 3) -> tuple[float, object]:
     return best * 1e6, out
 
 
-def emit(name: str, us: float, derived: str = "") -> None:
+def emit(name: str, us: float, derived: str = "", *, unit: str = "us",
+         direction: str = "lower") -> None:
     print(f"{name},{us:.1f},{derived}")
+    METRICS[name] = {"value": float(us), "unit": unit,
+                     "direction": direction}
     if RECORDER is not None:
         RECORDER.gauge("benchmark.metric", us, metric=name, derived=derived)
 

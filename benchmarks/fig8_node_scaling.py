@@ -8,9 +8,19 @@ serving the same request stream while a scripted ``repro.fleet``
 ChurnTrace crashes one node mid-request and walks another through a
 leave/return cycle.  Every request must still complete (retried where a
 crash killed its shards), and throughput under churn must stay >= 0.8x
-the static run at the same node count — the elasticity tax is bounded."""
+the static run at the same node count — the elasticity tax is bounded.
+
+Plus the **trace gate** (exit-code gated): two seeded replays of the
+churn scenario, recorded through ``repro.telemetry``, must reconstruct
+**byte-identical** span trees (``tree_lines`` — ids, parentage, children
+order, canonical JSON), and every request's critical-path categories
+must sum to its recorded latency, with the scripted crash surfacing as
+nonzero retry-waste.  This is the determinism contract the trace layer
+adds on top of the event log."""
 
 from __future__ import annotations
+
+import tempfile
 
 import numpy as np
 
@@ -34,7 +44,9 @@ def main() -> dict:
                                [(0.0, EDGE_MODELS[m](), MODEL_DELTA[m])])
                 lats.append(rep.records[0].latency)
             row[s] = float(np.mean(lats))
-            emit(f"fig8/{n}nodes/{s}", row[s] * 1e6)
+            # simulated latency: deterministic domain time, so the
+            # regression diff gates it (unlike wall-clock "us" metrics)
+            emit(f"fig8/{n}nodes/{s}", row[s] * 1e6, unit="sim_us")
         out[n] = row
         print(f"{n}".ljust(8) + "".join(f"{row[s] * 1e3:11.0f}"
                                         for s in STRATS))
@@ -49,6 +61,7 @@ def main() -> dict:
           "our wireless medium saturates later than theirs, see "
           "EXPERIMENTS.md)")
     churn_gate()
+    trace_gate()
     return out
 
 
@@ -87,7 +100,8 @@ def churn_gate(n_requests: int = 12, floor: float = 0.8) -> dict:
           f"{churn.total_retries()} retries, "
           f"{churn.total_migrations()} migrations, "
           f"{fleet.epoch} membership epochs")
-    emit("fig8/churn/throughput_ratio_x1000", ratio * 1e3)
+    emit("fig8/churn/throughput_ratio_x1000", ratio * 1e3,
+         unit="ratio", direction="higher")
     assert len(churn.records) == n_requests, \
         "churn lost a request — every mid-request failure must retry"
     assert churn.total_retries() >= 1, \
@@ -97,6 +111,72 @@ def churn_gate(n_requests: int = 12, floor: float = 0.8) -> dict:
     print(f"PASS: churn throughput >= {floor}x static with every "
           "failure retried to completion")
     return {"static": static_tp, "churn": churn_tp, "ratio": ratio}
+
+
+def trace_gate(n_requests: int = 12, eps: float = 1e-6) -> dict:
+    """Span-tree determinism + critical-path exactness over the fig8
+    churn scenario.
+
+    Two independent seeded replays (``planning_time=0.0`` — the
+    documented replay mode that keeps wall-clock DP overhead out of
+    simulated time) are recorded into separate stores; their
+    reconstructed trees, rendered as canonical ``tree_lines``, must be
+    byte-identical, every request's critical-path categories must sum
+    to its recorded latency within ``eps``, and the scripted crash must
+    surface as nonzero retry-waste.  Gated (assert -> non-zero exit in
+    CI)."""
+    from repro.telemetry import (RunStore, TelemetryRecorder,
+                                 request_critical_paths, span_trees,
+                                 tree_lines)
+
+    names = ["resnet152", "vgg19"]
+
+    def one_replay(root):
+        wl = [SimRequest(i, EDGE_MODELS[names[i % 2]](), 0.8 * i,
+                         MODEL_DELTA[names[i % 2]])
+              for i in range(n_requests)]
+        trace = ChurnTrace.scripted([
+            (0.4, "tx2", "crash"), (3.0, "tx2", "join"),
+            (4.0, "nano", "leave"), (6.0, "nano", "join")])
+        store = RunStore(root)
+        rec = TelemetryRecorder(store.new_run("fig8trace"), store=store)
+        fleet = FleetController(paper_cluster(), trace, telemetry=rec)
+        rep = EdgeSimulator(paper_cluster(), "hidp", fleet=fleet,
+                            telemetry=rec, planning_time=0.0).run(wl)
+        rec.close()
+        return store, rec.run, rep
+
+    with tempfile.TemporaryDirectory() as td_a, \
+            tempfile.TemporaryDirectory() as td_b:
+        store_a, run_a, rep_a = one_replay(td_a)
+        store_b, run_b, rep_b = one_replay(td_b)
+        lines_a = tree_lines(span_trees(store_a.events(run_a)))
+        lines_b = tree_lines(span_trees(store_b.events(run_b)))
+        paths = request_critical_paths(store_a, run_a)
+
+    print("\n== Fig 8 trace gate: span-tree determinism + "
+          "critical-path exactness ==")
+    assert lines_a == lines_b, (
+        "two seeded replays reconstructed different span trees — "
+        "trace identity leaked nondeterminism")
+    assert len(paths) == n_requests, (len(paths), n_requests)
+    max_resid = max(abs(p.residual) for p in paths)
+    assert max_resid <= eps, (
+        f"critical-path categories do not sum to recorded latency "
+        f"(max residual {max_resid:.3e} s > {eps:.0e})")
+    waste = sum(p.categories["retry_waste"] for p in paths)
+    assert waste > 0, (
+        "the scripted crash produced no retry-waste in any critical "
+        "path — attempt parentage is broken")
+    print(f"{len(lines_a)} tree lines byte-identical across replays | "
+          f"{len(paths)} requests, max residual {max_resid:.2e} s, "
+          f"retry waste {waste * 1e3:.1f} ms")
+    emit("fig8/trace/lines", float(len(lines_a)), unit="count")
+    emit("fig8/trace/retry_waste", waste * 1e6, unit="sim_us")
+    print("PASS: trace trees replay byte-identical and critical paths "
+          "sum exactly")
+    return {"lines": len(lines_a), "max_residual": max_resid,
+            "retry_waste_s": waste}
 
 
 if __name__ == "__main__":

@@ -11,6 +11,11 @@ as a ``benchmark.metric`` gauge, every suite gets a ``benchmark.suite``
 wall-clock span, and the run closes with a manifest plus a rendered
 ``repro.telemetry.report`` summary.  A telemetry run that records no
 events exits nonzero — the CI smoke gates on that.
+
+With ``--bench-json PATH`` the run's emitted metrics are written as a
+``repro.telemetry.regress`` snapshot (the ``BENCH_<n>.json`` series);
+CI diffs its snapshot against the committed baseline and fails on >25 %
+drift in any gated (non-wall) metric.
 """
 
 from __future__ import annotations
@@ -47,6 +52,11 @@ def main(argv: list[str] | None = None) -> int:
     parser.add_argument("--telemetry-dir", default=None, metavar="DIR",
                         help="record the run into a repro.telemetry "
                              "RunStore under DIR and print its report")
+    parser.add_argument("--bench-json", default=None, metavar="PATH",
+                        help="write a repro.telemetry.regress metric "
+                             "snapshot (e.g. BENCH_1.json) after the "
+                             "run — the file CI diffs against the "
+                             "committed baseline")
     args = parser.parse_args(argv)
     picks = args.suites or list(suites)
 
@@ -77,6 +87,14 @@ def main(argv: list[str] | None = None) -> int:
         except ValueError as e:
             print(f"telemetry report failed: {e}", file=sys.stderr)
             return 1
+    if args.bench_json:
+        from repro.telemetry.regress import write_snapshot
+        if not common.METRICS:
+            print("bench-json: the run emitted no metrics — nothing to "
+                  "snapshot", file=sys.stderr)
+            return 1
+        path = write_snapshot(args.bench_json, common.METRICS, picks)
+        print(f"bench snapshot: {len(common.METRICS)} metrics -> {path}")
     return 0
 
 

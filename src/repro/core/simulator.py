@@ -14,6 +14,7 @@ expensive — one of the trade-offs HiDP's DP weighs.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Iterable, Sequence
 
@@ -224,12 +225,18 @@ class EdgeSimulator:
     hardware really did execute them.
 
     ``telemetry`` (a ``repro.telemetry.TelemetryRecorder``) makes the run
-    durable: per-request and per-attempt spans (including fault-injection
-    retries), retry/migration/SLO counters stamped with the membership
-    epoch in effect, and the logical clock advanced with simulated time so
-    every other instrumented subsystem (cache, fleet, feedback) timestamps
-    consistently.  A disabled recorder is normalized away — the hot path
-    pays a single ``is not None`` check (see docs/observability.md).
+    durable — and causal: each ``sim.request`` span is a trace-tree root
+    over its ``sim.attempt`` children (fault-injection retries parent
+    under the original request), and each attempt carries per-stage
+    ``sim.plan`` / ``sim.queue_wait`` / ``sim.compute`` / ``sim.comm``
+    child spans plus whatever the plan cache and fleet emitted while the
+    attempt was open — so ``repro.telemetry.trace`` can answer where any
+    request's latency went.  Retry/migration/SLO counters are stamped
+    with the membership epoch in effect, and the logical clock advances
+    with simulated time so every other instrumented subsystem (cache,
+    fleet, feedback) timestamps consistently.  A disabled recorder is
+    normalized away — the hot path pays a single ``is not None`` check
+    (see docs/observability.md).
 
     ``planning_time`` controls how planner overhead enters *simulated*
     time: the default ``"wall"`` charges each attempt's measured
@@ -319,6 +326,15 @@ class EdgeSimulator:
         self.medium_busy = end
         self.medium_spans.append((start, end))
         self.radio_energy += self.RADIO_POWER * (end - start)
+        tel = self.telemetry
+        if tel is not None:
+            # children of the open sim.attempt context: contention on the
+            # shared half-duplex medium, then the transfer itself
+            if start - ready > 1e-12:
+                tel.child_span("sim.queue_wait", start - ready, t=ready,
+                               resource="medium")
+            tel.child_span("sim.comm", end - start, t=start,
+                           resource="medium", bytes=nbytes)
         return end
 
     # ------------------------------------------------------- local execution
@@ -375,6 +391,7 @@ class EdgeSimulator:
         resources = processors_as_resources(node, delta, kind)
         energy = 0.0
         part = lp.partition
+        tel = self.telemetry
         if isinstance(part, ModelPartition):
             t = ready
             for si in range(part.num_stages):
@@ -385,10 +402,15 @@ class EdgeSimulator:
                 compute = self._compute_seconds(node, ri, seg.flops, r.rate,
                                                 kind, delta)
                 watts = self._active_watts(node, ri)
-                dur = comm_time(seg.bytes_in, r.bw, r.rtt) + compute
+                comm = comm_time(seg.bytes_in, r.bw, r.rtt)
+                dur = comm + compute
                 proc = node.processors[ri].name
+                t0 = t
                 t = self._reserve_proc(node.name, proc, t, dur, seg.flops,
                                        watts, rid)
+                if tel is not None:
+                    self._emit_stage(tel, node.name, proc, rid, t0, t - dur,
+                                     comm, compute, seg.bytes_in)
                 energy += watts * dur
                 self._observe(node, ri, seg.flops, seg.bytes_in, kind, delta,
                               compute, watts * compute, end=t)
@@ -400,17 +422,39 @@ class EdgeSimulator:
             compute = self._compute_seconds(node, ri, sub.total_flops * f,
                                             r.rate, kind, delta)
             watts = self._active_watts(node, ri)
-            dur = comm_time((sub.input_bytes + sub.output_bytes) * f,
-                            r.bw, r.rtt) + compute
+            comm = comm_time((sub.input_bytes + sub.output_bytes) * f,
+                             r.bw, r.rtt)
+            dur = comm + compute
             proc = node.processors[ri].name
             end = self._reserve_proc(node.name, proc, ready, dur,
                                      sub.total_flops * f, watts, rid)
+            if tel is not None:
+                self._emit_stage(tel, node.name, proc, rid, ready,
+                                 end - dur, comm, compute,
+                                 (sub.input_bytes + sub.output_bytes) * f)
             energy += watts * dur
             self._observe(node, ri, sub.total_flops * f,
                           (sub.input_bytes + sub.output_bytes) * f, kind,
                           delta, compute, watts * compute, end=end)
             done = max(done, end)
         return done, energy
+
+    def _emit_stage(self, tel, node: str, proc: str, rid: int,
+                    ready: float, start: float, comm: float,
+                    compute: float, nbytes: float) -> None:
+        """Per-stage trace children under the open ``sim.attempt``:
+        processor contention (queue-wait), the intra-node input transfer
+        (its bus shares the processor reservation), and the compute
+        shard itself — the spans critical paths and per-node utilization
+        are computed from."""
+        if start - ready > 1e-12:
+            tel.child_span("sim.queue_wait", start - ready, t=ready,
+                           resource=f"{node}/{proc}", request=rid)
+        if comm > 0:
+            tel.child_span("sim.comm", comm, t=start, request=rid,
+                           resource=f"{node}/{proc}", bytes=nbytes)
+        tel.child_span("sim.compute", compute, t=start + comm,
+                       node=node, proc=proc, request=rid)
 
     # ----------------------------------------------------------- one request
     def _plan_for(self, req: SimRequest,
@@ -495,88 +539,114 @@ class EdgeSimulator:
         tel = self.telemetry
         if tel is not None:
             tel.advance(req.arrival)
-        if self.fleet is not None:
-            # graceful events (leave/join/battery/thermal) land at the
-            # planning boundary; crashes are handled mid-request below
-            self.fleet.advance(req.arrival)
-            self._sync_leader()
-        start = req.arrival
-        total_energy = 0.0
-        retries = migrations = 0
-        while True:
-            plan = self._plan_for(req, objective)
-            snap = self._snapshot()
-            overhead = (plan.planning_seconds
-                        if self.planning_time == "wall"
-                        else self.planning_time)
-            t, energy = self._execute_plan(req, plan, start + overhead)
-            crash = None
+        # the request's trace-tree root: attempts, per-stage shards, plan
+        # cache activity, and fleet epochs it triggered all parent under it
+        with (tel.trace("sim.request", t=req.arrival, tenant=req.dag.name,
+                        request=req.request_id) if tel is not None
+              else contextlib.nullcontext()) as req_h:
             if self.fleet is not None:
-                used = {a.node.name for a in plan.global_plan.assignments}
-                used.add(self.leader)
-                crash = self.fleet.next_failure(start, t, used)
-            if crash is None:
-                total_energy += energy
-                self._flush_observations()
+                # graceful events (leave/join/battery/thermal) land at the
+                # planning boundary; crashes are handled mid-request below
+                self.fleet.advance(req.arrival)
+                self._sync_leader()
+            start = req.arrival
+            total_energy = 0.0
+            retries = migrations = 0
+            while True:
+                crash = None
+                with (tel.trace("sim.attempt", t=start,
+                                tenant=req.dag.name,
+                                request=req.request_id)
+                      if tel is not None
+                      else contextlib.nullcontext()) as att_h:
+                    plan = self._plan_for(req, objective)
+                    snap = self._snapshot()
+                    overhead = (plan.planning_seconds
+                                if self.planning_time == "wall"
+                                else self.planning_time)
+                    if tel is not None:
+                        # planning overhead as charged into domain time
+                        tel.child_span("sim.plan", overhead, t=start,
+                                       tenant=req.dag.name,
+                                       request=req.request_id)
+                    t, energy = self._execute_plan(req, plan,
+                                                   start + overhead)
+                    if self.fleet is not None:
+                        used = {a.node.name
+                                for a in plan.global_plan.assignments}
+                        used.add(self.leader)
+                        crash = self.fleet.next_failure(start, t, used)
+                    if crash is None:
+                        total_energy += energy
+                        self._flush_observations()
+                        if tel is not None:
+                            tel.advance(t)
+                            att_h.set(t - start, epoch=self._epoch(),
+                                      ok=True)
+                    else:
+                        # mid-request failure: truncate the doomed attempt,
+                        # consume the trace through the crash (one
+                        # coalesced membership epoch), re-elect if the
+                        # leader fell, re-plan on survivors, retry; only
+                        # shards that really finished before the crash
+                        # reach the feedback loop
+                        self._flush_observations(up_to=crash.time)
+                        total_energy += self._rollback_to_crash(snap,
+                                                                crash.time)
+                        self.fleet.advance(crash.time)
+                        migrated = sum(
+                            1 for a in plan.global_plan.assignments
+                            if not self.fleet.manager.node(
+                                a.node.name).available)
+                        migrations += migrated
+                        retries += 1
+                        self._sync_leader()
+                        if tel is not None:
+                            tel.advance(crash.time)
+                            att_h.set(crash.time - start,
+                                      epoch=self._epoch(), ok=False,
+                                      crashed=crash.node)
+                if crash is None:
+                    break
+                # retry accounting parents under the *request*, not the
+                # closed attempt — a retry is the request's fate
                 if tel is not None:
-                    tel.advance(t)
-                    tel.span("sim.attempt", t - start, t=start,
-                             tenant=req.dag.name, epoch=self._epoch(),
-                             request=req.request_id, ok=True)
-                break
-            # mid-request failure: truncate the doomed attempt, consume the
-            # trace through the crash (one coalesced membership epoch),
-            # re-elect if the leader fell, re-plan on survivors, retry;
-            # only shards that really finished before the crash reach the
-            # feedback loop
-            self._flush_observations(up_to=crash.time)
-            total_energy += self._rollback_to_crash(snap, crash.time)
-            self.fleet.advance(crash.time)
-            migrated = sum(
-                1 for a in plan.global_plan.assignments
-                if not self.fleet.manager.node(a.node.name).available)
-            migrations += migrated
-            retries += 1
-            self._sync_leader()
+                    tel.counter("sim.retry", t=crash.time,
+                                tenant=req.dag.name, epoch=self._epoch(),
+                                request=req.request_id, crashed=crash.node)
+                    if migrated:
+                        tel.counter("sim.migration", migrated,
+                                    t=crash.time, tenant=req.dag.name,
+                                    epoch=self._epoch(),
+                                    request=req.request_id)
+                if self.fleet.manager.first_available() is None:
+                    raise RuntimeError(
+                        f"request {req.request_id}: every node failed; "
+                        "nothing left to retry on")
+                start = crash.time
+            rec = RequestRecord(request_id=req.request_id,
+                                dag_name=req.dag.name,
+                                arrival=req.arrival, completion=t,
+                                active_energy=total_energy,
+                                mode=plan.global_plan.mode,
+                                predicted_latency=plan.predicted_latency,
+                                predicted_energy=plan.predicted_energy,
+                                retries=retries, migrations=migrations,
+                                slo=req.slo)
             if tel is not None:
-                tel.advance(crash.time)
-                tel.span("sim.attempt", crash.time - start, t=start,
-                         tenant=req.dag.name, epoch=self._epoch(),
-                         request=req.request_id, ok=False, crashed=crash.node)
-                tel.counter("sim.retry", t=crash.time, tenant=req.dag.name,
-                            epoch=self._epoch(), request=req.request_id,
-                            crashed=crash.node)
-                if migrated:
-                    tel.counter("sim.migration", migrated, t=crash.time,
+                req_h.set(rec.latency, epoch=self._epoch(), mode=rec.mode,
+                          retries=retries, migrations=migrations,
+                          slo_violated=rec.slo_violated,
+                          active_energy_j=rec.active_energy,
+                          predicted_latency_s=rec.predicted_latency,
+                          predicted_energy_j=rec.predicted_energy)
+                if rec.slo_violated:
+                    tel.counter("sim.slo_violation", t=rec.completion,
                                 tenant=req.dag.name, epoch=self._epoch(),
                                 request=req.request_id)
-            if self.fleet.manager.first_available() is None:
-                raise RuntimeError(
-                    f"request {req.request_id}: every node failed; nothing "
-                    "left to retry on")
-            start = crash.time
-        rec = RequestRecord(request_id=req.request_id,
-                            dag_name=req.dag.name,
-                            arrival=req.arrival, completion=t,
-                            active_energy=total_energy,
-                            mode=plan.global_plan.mode,
-                            predicted_latency=plan.predicted_latency,
-                            predicted_energy=plan.predicted_energy,
-                            retries=retries, migrations=migrations,
-                            slo=req.slo)
-        if tel is not None:
-            tel.span("sim.request", rec.latency, t=req.arrival,
-                     tenant=req.dag.name, epoch=self._epoch(),
-                     request=req.request_id, mode=rec.mode,
-                     retries=retries, migrations=migrations,
-                     slo_violated=rec.slo_violated,
-                     active_energy_j=rec.active_energy,
-                     predicted_latency_s=rec.predicted_latency,
-                     predicted_energy_j=rec.predicted_energy)
-            if rec.slo_violated:
-                tel.counter("sim.slo_violation", t=rec.completion,
-                            tenant=req.dag.name, epoch=self._epoch(),
-                            request=req.request_id)
+                tel.gauge("sim.energy", rec.active_energy,
+                          t=rec.completion, tenant=req.dag.name,
+                          epoch=self._epoch(), request=req.request_id)
         return rec
 
     def _execute_plan(self, req: SimRequest, plan: HiDPPlan,

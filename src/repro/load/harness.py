@@ -42,10 +42,16 @@ Request lifecycle (every arrival ends in exactly one terminal state)::
   :class:`~repro.load.service.PlanServiceModel`, one membership-keyed
   cache resolution per tenant per epoch).
 * **Telemetry** — every queue decision is recorded: ``load.reject`` /
-  ``load.shed`` / ``load.admit`` counters, a ``load.queue_wait`` span per
-  dispatch and a ``load.request`` span per completion, all epoch-stamped
-  with deterministic domain time — two seeded replays of the same trace
-  produce byte-identical canonical logs (docs/observability.md).
+  ``load.shed`` / ``load.admit`` counters, ``load.queue_wait`` and
+  ``load.service`` spans per dispatch and a ``load.request`` span per
+  completion, all epoch-stamped with deterministic domain time.  The
+  event loop cannot nest ``trace()`` contexts (a request's life spans
+  many loop iterations), so each enqueued arrival gets an explicitly
+  allocated span id: queue-wait/service/shed events carry it as
+  ``parent_id`` and the terminal ``load.request`` claims it as
+  ``span_id`` — the flat log still reconstructs into per-request trees
+  (:mod:`repro.telemetry.trace`), and two seeded replays of the same
+  trace produce byte-identical canonical logs (docs/observability.md).
 
 Ties are deterministic: a lane-free event at the same instant as an
 arrival is processed first (the freed slot is visible to the arrival's
@@ -421,7 +427,8 @@ class OpenLoopHarness:
             tel.counter("load.shed", t=now,
                         tenant=self.trace.tenants[self._tid[idx]],
                         epoch=self._epoch(), request=int(idx),
-                        reason=reason)
+                        reason=reason,
+                        parent_id=int(self._span_ids[idx]))
 
     # ---------------------------------------------------------- scheduling
     def _pop(self, now: float) -> int | None:
@@ -479,11 +486,14 @@ class OpenLoopHarness:
         if tel is not None:
             name = self.trace.tenants[ti]
             ep = self._epoch()
+            sid = int(self._span_ids[idx])
             tel.counter("load.admit", t=now, tenant=name, epoch=ep,
-                        request=int(idx))
+                        request=int(idx), parent_id=sid)
             tel.span("load.queue_wait", now - self._arrival[idx],
                      t=self._arrival[idx], tenant=name, epoch=ep,
-                     request=int(idx))
+                     request=int(idx), parent_id=sid)
+            tel.span("load.service", self._svc[ti], t=now, tenant=name,
+                     epoch=ep, request=int(idx), parent_id=sid)
         return True
 
     # ------------------------------------------------------------------ run
@@ -497,6 +507,11 @@ class OpenLoopHarness:
         self._finish = np.full(n, math.nan)
         self._queues: list[deque[int]] = [deque()
                                           for _ in trace.tenants]
+        # pre-allocated trace-tree identity per arrival: the event loop
+        # cannot hold a trace() context open across iterations, so the
+        # terminal load.request claims this id as span_id and every
+        # queue-wait/service/shed event cites it as parent_id
+        self._span_ids = np.full(n, -1, np.int64)
         self._deficit = np.zeros(len(trace.tenants))
         self._queued_total = 0
         self._busy: list[float] = []           # finish-time min-heap
@@ -529,7 +544,8 @@ class OpenLoopHarness:
                          tenant=tenants[ti], epoch=self._epoch(),
                          request=int(idx),
                          slo_violated=bool(not math.isnan(slo)
-                                           and lat > slo))
+                                           and lat > slo),
+                         span_id=int(self._span_ids[idx]))
 
         i = 0
         now = 0.0
@@ -564,6 +580,8 @@ class OpenLoopHarness:
                                     epoch=self._epoch(), request=int(idx),
                                     reason="queue_full")
                     continue
+                if tel is not None:
+                    self._span_ids[idx] = tel.allocate_span()
                 self._queues[self._tid[idx]].append(idx)
                 self._queued_total += 1
             while len(self._busy) < cfg.servers:

@@ -18,6 +18,7 @@ Runs identically on a CPU test mesh (tiny configs) and the production mesh.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -161,19 +162,28 @@ class ServingEngine:
                     "a plan_cache is wired but this submit names no "
                     "tenant: pass dag= here or default_dag= to the engine")
             misses0 = self.plan_cache.misses
-            self.plan = self.plan_cache.get(dag, objective=objective,
-                                            delta=delta)
-            fp = dag_fingerprint(dag)
-            self.tenant_plans[fp] = self.plan
-            self._tenant_deltas[fp] = delta
-            if self.telemetry is not None:
-                # per-tenant cache resolution: was this submit served off
-                # the warm front, or did it pay the tenant's DP pass?
-                self.telemetry.counter(
-                    "engine.submit", tenant=dag.name, request=rid,
-                    objective=objective,
-                    resolved="miss" if self.plan_cache.misses > misses0
-                    else "hit")
+            # the resolve context roots this submit's trace subtree: the
+            # cache's hit/miss counters and any frontier-pass span it
+            # triggers auto-parent under it
+            with (self.telemetry.trace(
+                      "engine.resolve", tenant=dag.name, request=rid,
+                      objective=objective, wall=True)
+                  if self.telemetry is not None
+                  else contextlib.nullcontext()):
+                self.plan = self.plan_cache.get(dag, objective=objective,
+                                                delta=delta)
+                fp = dag_fingerprint(dag)
+                self.tenant_plans[fp] = self.plan
+                self._tenant_deltas[fp] = delta
+                if self.telemetry is not None:
+                    # per-tenant cache resolution: was this submit served
+                    # off the warm front, or did it pay the tenant's DP
+                    # pass?
+                    self.telemetry.counter(
+                        "engine.submit", tenant=dag.name, request=rid,
+                        objective=objective,
+                        resolved="miss" if self.plan_cache.misses > misses0
+                        else "hit")
         elif self.telemetry is not None:
             self.telemetry.counter("engine.submit", request=rid,
                                    objective=objective, resolved="none")
@@ -255,15 +265,23 @@ class ServingEngine:
         self.state = State.EXPLORE
         self.trace.append(self.state)
         self.replans += 1
-        if self.telemetry is not None:
-            self.telemetry.counter(
-                "engine.replan", reason="epoch",
-                epoch=getattr(epoch, "epoch", None),
-                tenants=len(self._tenant_traffic()))
-        if self.plan_cache is not None:
-            self._replan_in_flight_tenants()
-        if self.on_replan is not None:
-            self.on_replan()
+        # one trace subtree per EXPLORE re-entry: the replan counter and
+        # every per-tenant resolution (warm hit or frontier pass) parent
+        # under it
+        with (self.telemetry.trace(
+                  "engine.replan_pass", reason="epoch",
+                  epoch=getattr(epoch, "epoch", None), wall=True)
+              if self.telemetry is not None
+              else contextlib.nullcontext()):
+            if self.telemetry is not None:
+                self.telemetry.counter(
+                    "engine.replan", reason="epoch",
+                    epoch=getattr(epoch, "epoch", None),
+                    tenants=len(self._tenant_traffic()))
+            if self.plan_cache is not None:
+                self._replan_in_flight_tenants()
+            if self.on_replan is not None:
+                self.on_replan()
 
     def run_until_done(self, max_steps: int = 10_000) -> dict[int, Request]:
         for _ in range(max_steps):
@@ -364,21 +382,26 @@ class ServingEngine:
                 self.state = State.EXPLORE
                 self.trace.append(self.state)
                 self.replans += 1
-                if self.telemetry is not None:
-                    self.telemetry.counter(
-                        "engine.replan", reason="drift",
-                        tenants=len(self._tenant_traffic()))
-                if self.plan_cache is not None:
-                    # the drift already bumped the calibration version (via
-                    # version_source or this on_drift); re-plan exactly
-                    # once *per in-flight tenant* — each tenant's first
-                    # post-bump lookup is its single frontier pass — at
-                    # the objective that tenant's traffic wants and the
-                    # delta its front was keyed under
-                    self.plan_cache.on_drift()
-                    self._replan_in_flight_tenants()
-                if self.on_replan is not None:
-                    self.on_replan()
+                with (self.telemetry.trace("engine.replan_pass",
+                                           reason="drift", wall=True)
+                      if self.telemetry is not None
+                      else contextlib.nullcontext()):
+                    if self.telemetry is not None:
+                        self.telemetry.counter(
+                            "engine.replan", reason="drift",
+                            tenants=len(self._tenant_traffic()))
+                    if self.plan_cache is not None:
+                        # the drift already bumped the calibration version
+                        # (via version_source or this on_drift); re-plan
+                        # exactly once *per in-flight tenant* — each
+                        # tenant's first post-bump lookup is its single
+                        # frontier pass — at the objective that tenant's
+                        # traffic wants and the delta its front was keyed
+                        # under
+                        self.plan_cache.on_drift()
+                        self._replan_in_flight_tenants()
+                    if self.on_replan is not None:
+                        self.on_replan()
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         for s, req in enumerate(self.slot_req):
             if req is None:

@@ -1,0 +1,22 @@
+"""jax version compatibility for ``shard_map``.
+
+Newer jax exposes ``jax.shard_map(..., check_vma=)``; older releases
+(through 0.4.x) ship it as ``jax.experimental.shard_map.shard_map`` with
+the same knob spelled ``check_rep=``.  Resolve whichever this
+environment has once, behind a single signature (the modern one), so the
+sharded model code (``repro.models.moe_ep``, ``repro.sharding.pipeline``)
+runs on both sides of the rename.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)

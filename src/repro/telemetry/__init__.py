@@ -27,6 +27,9 @@ recorder normalizes to no recorder at all (see :func:`active`), gated at
 """
 
 from .events import KINDS, WALL_FIELDS, TelemetryEvent  # noqa: F401
-from .recorder import TelemetryRecorder, active  # noqa: F401
+from .recorder import SpanHandle, TelemetryRecorder, active  # noqa: F401
 from .report import run_summary, sim_aggregates  # noqa: F401
 from .store import RunStore  # noqa: F401
+from .trace import (SpanNode, critical_path,  # noqa: F401
+                    node_utilization, overlap_headroom,
+                    request_critical_paths, span_trees, tree_lines)

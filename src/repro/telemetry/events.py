@@ -17,6 +17,17 @@ exactly three kinds:
     A level sampled at an instant: fleet membership size, drift
     magnitude, elastic world size, joules.
 
+Spans form **trace trees**: every span may carry a recorder-assigned
+``span_id`` and any event a ``parent_id`` naming the span it happened
+*inside* — a retry attempt under its request, a frontier pass under the
+submit that triggered it, a per-stage compute shard under its attempt.
+Ids come from the recorder's deterministic allocation counter (program
+order, not wall clocks), so parentage is part of the replayable surface:
+:meth:`TelemetryEvent.canonical` **keeps** both fields, and two seeded
+replays must agree on the whole tree byte-for-byte.
+:mod:`repro.telemetry.trace` reconstructs the trees and computes
+critical paths from them.
+
 Determinism is a schema contract, not an aspiration: every field except
 the :data:`WALL_FIELDS` (``wall`` — the unix timestamp, ``wall_s`` — a
 wall-clock-measured duration) must be reproducible under the repo's
@@ -60,6 +71,12 @@ class TelemetryEvent:
         epoch: the fleet membership epoch in effect, None outside churn.
         attrs: free-form deterministic attributes (request id, node,
             metric, shape, ...).
+        span_id: this span's identity in the trace tree (recorder-
+            allocated, deterministic program order); None for events that
+            are not themselves spans-with-children.
+        parent_id: the ``span_id`` of the enclosing span — what makes
+            flat logs reconstructable as causal trees; None for roots
+            and for events emitted outside any span context.
         wall: unix timestamp at emission (nondeterministic, stripped by
             :meth:`canonical`).
         wall_s: wall-clock-measured duration for spans timed against
@@ -74,6 +91,8 @@ class TelemetryEvent:
     tenant: str = ""
     epoch: int | None = None
     attrs: Mapping = dataclasses.field(default_factory=dict)
+    span_id: int | None = None
+    parent_id: int | None = None
     wall: float = 0.0
     wall_s: float | None = None
 
@@ -92,6 +111,10 @@ class TelemetryEvent:
             d["epoch"] = self.epoch
         if self.attrs:
             d["attrs"] = dict(self.attrs)
+        if self.span_id is not None:
+            d["span_id"] = self.span_id
+        if self.parent_id is not None:
+            d["parent_id"] = self.parent_id
         d["wall"] = self.wall
         if self.wall_s is not None:
             d["wall_s"] = self.wall_s
@@ -107,6 +130,7 @@ class TelemetryEvent:
                    value=float(d["value"]), t=float(d.get("t", 0.0)),
                    tenant=d.get("tenant", ""), epoch=d.get("epoch"),
                    attrs=dict(d.get("attrs", {})),
+                   span_id=d.get("span_id"), parent_id=d.get("parent_id"),
                    wall=float(d.get("wall", 0.0)), wall_s=d.get("wall_s"))
 
     @classmethod
@@ -116,7 +140,9 @@ class TelemetryEvent:
     # -------------------------------------------------------- determinism
     def canonical(self) -> str:
         """The event as JSON with the :data:`WALL_FIELDS` stripped — the
-        byte string two seeded replays of the same run must agree on."""
+        byte string two seeded replays of the same run must agree on.
+        ``span_id``/``parent_id`` are deliberately *kept*: trace-tree
+        shape is deterministic and part of the replay contract."""
         d = self.to_dict()
         for f in WALL_FIELDS:
             d.pop(f, None)

@@ -1,6 +1,6 @@
 """Per-run summary reports over a :class:`~repro.telemetry.RunStore`.
 
-Two layers:
+Three layers:
 
 * :func:`sim_aggregates` — the *exact* reconstruction surface: the run
   totals a :class:`~repro.core.simulator.SimReport` computes in memory
@@ -12,14 +12,20 @@ Two layers:
 * :func:`run_summary` / :func:`render` — the human table: request
   percentiles (p50/p99), energy, hit rates, retries per epoch, drift and
   membership history.
+* :func:`render_trace` / :func:`render_timelines` — the causal layer
+  (:mod:`repro.telemetry.trace`): where each request's latency went
+  (plan/queue/compute/comm/retry-waste), per-resource utilization,
+  overlap headroom, and ASCII latency/energy timelines drawn from
+  :meth:`RunStore.aggregate` windows — no plotting dependencies.
 
 CLI (exit-code gated; CI smokes it)::
 
-    python -m repro.telemetry.report <store-dir> [run]
+    python -m repro.telemetry.report <store-dir> [run] [--window SECONDS]
 
-exits nonzero when the store has no runs or the chosen run recorded no
-events — an instrumented pipeline that produced nothing is a failure,
-not an empty table.
+exits nonzero when the store has no runs, the chosen run recorded no
+events, or the run has a manifest but zero *span* events — an
+instrumented pipeline that produced nothing (a disabled recorder wired
+where an enabled one was meant) is a failure, not an empty table.
 """
 
 from __future__ import annotations
@@ -27,6 +33,7 @@ from __future__ import annotations
 import sys
 
 from .store import RunStore
+from .trace import CATEGORIES, trace_summary
 
 
 def percentile(xs: list[float], q: float) -> float:
@@ -139,17 +146,102 @@ def render(summary: dict) -> str:
     return "\n".join(lines)
 
 
-def generate(store: RunStore, run: str | None = None) -> str:
+def render_trace(tsum: dict) -> str:
+    """The causal section: critical-path category breakdown (mean
+    seconds and share of mean latency), per-resource utilization, and
+    overlap headroom.  Empty string when the run has no request roots
+    (pure benchmark runs) — the caller then skips the section."""
+    if not tsum["requests"]:
+        return ""
+    lines = [f"  -- critical path ({tsum['requests']} requests, mean "
+             f"latency {tsum['mean_latency_s'] * 1e3:.1f} ms) --"]
+    width = max(len(c) for c in CATEGORIES)
+    for cat in CATEGORIES:
+        mean = tsum["category_means_s"][cat]
+        frac = tsum["category_fractions"][cat]
+        bar = "#" * int(round(frac * 30))
+        lines.append(f"  {cat:<{width}}  {mean * 1e3:9.2f} ms "
+                     f"{frac * 100:5.1f}%  {bar}")
+    lines.append(f"  residual (max)  {tsum['max_residual_s']:.2e} s")
+    util = tsum["utilization"]
+    if util:
+        lines.append("  -- utilization --")
+        w = max(len(k) for k in util)
+        for key, u in util.items():
+            bar = "#" * int(round(u["utilization"] * 30))
+            lines.append(f"  {key:<{w}}  busy {u['busy_s']:8.3f} s  "
+                         f"util {u['utilization'] * 100:5.1f}%  {bar}")
+    head = tsum["headroom"]
+    total = head.get("total", {})
+    if total.get("idle_while_peer_busy_s", 0.0) > 0:
+        lines.append(
+            f"  overlap headroom: "
+            f"{total['idle_while_peer_busy_s']:.3f} s idle-while-peer-busy"
+            f" ({total['fraction'] * 100:.1f}% of node-time) — "
+            "reclaimable by pipelined execution")
+    return "\n".join(lines)
+
+
+def timeline(store: RunStore, run: str, name: str, *,
+             kind: str | None = None, window: float = 1.0,
+             reduce: str = "mean", width: int = 40,
+             unit: str = "") -> list[str]:
+    """One metric's :meth:`RunStore.aggregate` windows as ASCII bars —
+    one line per non-empty window, bar length proportional to the
+    window's value over the run maximum.  Empty list when the run never
+    logged the metric."""
+    buckets = store.aggregate(run, name, kind=kind, window=window,
+                              reduce=reduce)
+    if not buckets:
+        return []
+    peak = max(v for _, v in buckets) or 1.0
+    lines = [f"  -- {name} per {window:g} s ({reduce}{', ' + unit if unit else ''}) --"]
+    for t0, v in buckets:
+        bar = "#" * max(1, int(round(v / peak * width)))
+        lines.append(f"  [{t0:8.2f} s] {v:12.6g} {bar}")
+    return lines
+
+
+def render_timelines(store: RunStore, run: str,
+                     window: float = 1.0) -> str:
+    """Latency and energy over the run's logical time: mean request
+    latency per window (``sim.request``, or ``load.request`` for
+    queueing runs) and joules per window (``sim.energy`` gauges).
+    Whatever the run did not log is skipped."""
+    lines: list[str] = []
+    for name in ("sim.request", "load.request"):
+        lines += timeline(store, run, name, kind="span", window=window,
+                          reduce="mean", unit="s latency")
+    lines += timeline(store, run, "sim.energy", kind="gauge",
+                      window=window, reduce="sum", unit="J")
+    return "\n".join(lines)
+
+
+def generate(store: RunStore, run: str | None = None, *,
+             window: float = 1.0) -> str:
     """Render the report for ``run`` (default: the latest).  Raises
-    ``ValueError`` when the store has no runs or the run logged no
-    events — the exit-code contract the CI smoke gates on."""
+    ``ValueError`` when the store has no runs, the run logged no events,
+    or the run has a manifest but zero span events — the exit-code
+    contract the CI smoke gates on."""
     if run is None:
         run = store.latest()
         if run is None:
             raise ValueError(f"no runs under {store.root}")
     if not store.events(run):
         raise ValueError(f"run {run!r} recorded no events")
-    return render(run_summary(store, run))
+    if not store.events(run, kind="span"):
+        raise ValueError(
+            f"run {run!r} has a manifest but zero span events — nothing "
+            "to report on; was a disabled recorder wired where an "
+            "enabled one was meant?")
+    parts = [render(run_summary(store, run))]
+    tsec = render_trace(trace_summary(store, run))
+    if tsec:
+        parts.append(tsec)
+    tl = render_timelines(store, run, window)
+    if tl:
+        parts.append(tl)
+    return "\n".join(parts)
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -157,10 +249,23 @@ def main(argv: list[str] | None = None) -> int:
     if not argv or argv[0] in ("-h", "--help"):
         print(__doc__)
         return 0 if argv else 1
-    store = RunStore(argv[0])
-    run = argv[1] if len(argv) > 1 else None
+    window = 1.0
+    pos: list[str] = []
+    i = 0
+    while i < len(argv):
+        if argv[i] == "--window":
+            if i + 1 >= len(argv):
+                print("--window needs a value (seconds)", file=sys.stderr)
+                return 1
+            window = float(argv[i + 1])
+            i += 2
+        else:
+            pos.append(argv[i])
+            i += 1
+    store = RunStore(pos[0])
+    run = pos[1] if len(pos) > 1 else None
     try:
-        print(generate(store, run))
+        print(generate(store, run, window=window))
     except ValueError as e:
         print(f"telemetry report failed: {e}", file=sys.stderr)
         return 1

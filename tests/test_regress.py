@@ -1,0 +1,158 @@
+"""repro.telemetry.regress — snapshot schema, diff semantics, exit codes.
+
+The contract CI leans on: self-diff is clean (rc 0), a genuine regression
+in a gated metric fails (rc 1), wall-clock metrics never gate unless
+asked, and losing a baseline metric counts as a regression (coverage
+loss), not a silent pass.
+"""
+
+import json
+
+import pytest
+
+from repro.telemetry.regress import (DEFAULT_TOLERANCE, diff,
+                                     load_snapshot, main, render_diff,
+                                     snapshot, write_snapshot)
+
+BASE = {
+    "lat/sim": {"value": 1000.0, "unit": "sim_us", "direction": "lower"},
+    "tp/ratio": {"value": 0.9, "unit": "ratio", "direction": "higher"},
+    "wall/us": {"value": 500.0, "unit": "us", "direction": "lower"},
+}
+
+
+def _snap(metrics=BASE):
+    return snapshot(metrics, suites=["unit"])
+
+
+def test_snapshot_round_trip(tmp_path):
+    path = write_snapshot(tmp_path / "sub" / "BENCH_x.json", BASE,
+                          ["tab1", "fig8"])
+    d = load_snapshot(path)
+    assert d["suites"] == ["tab1", "fig8"]
+    assert d["metrics"]["lat/sim"] == BASE["lat/sim"]
+    # metric order is canonical (sorted) so snapshots diff cleanly as text
+    assert list(d["metrics"]) == sorted(BASE)
+
+
+def test_load_snapshot_rejects_bad_schema(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"schema": 99, "metrics": {}}))
+    with pytest.raises(ValueError, match="schema"):
+        load_snapshot(p)
+    p.write_text(json.dumps({"schema": 1}))
+    with pytest.raises(ValueError, match="metrics"):
+        load_snapshot(p)
+
+
+def test_self_diff_is_clean():
+    r = diff(_snap(), _snap())
+    assert r.ok
+    assert {e.status for e in r.entries} <= {"ok", "info"}
+    # wall metric is informational, the others gated
+    by_name = {e.name: e for e in r.entries}
+    assert by_name["wall/us"].status == "info"
+    assert by_name["lat/sim"].status == "ok"
+
+
+def test_lower_is_better_regression_gates():
+    cur = {**BASE, "lat/sim": {**BASE["lat/sim"], "value": 2000.0}}
+    r = diff(_snap(), _snap(cur))
+    assert not r.ok
+    e = {x.name: x for x in r.entries}["lat/sim"]
+    assert e.status == "regressed"
+    assert e.rel == pytest.approx(1.0)          # +100% in the bad direction
+    assert "REGRESSION" in render_diff(r)
+
+
+def test_lower_is_better_improvement_passes():
+    cur = {**BASE, "lat/sim": {**BASE["lat/sim"], "value": 500.0}}
+    r = diff(_snap(), _snap(cur))
+    assert r.ok
+    assert {x.name: x for x in r.entries}["lat/sim"].status == "improved"
+
+
+def test_higher_is_better_direction_flips():
+    worse = {**BASE, "tp/ratio": {**BASE["tp/ratio"], "value": 0.5}}
+    better = {**BASE, "tp/ratio": {**BASE["tp/ratio"], "value": 1.4}}
+    assert not diff(_snap(), _snap(worse)).ok
+    r = diff(_snap(), _snap(better))
+    assert r.ok
+    assert {x.name: x for x in r.entries}["tp/ratio"].status == "improved"
+
+
+def test_wall_metrics_report_but_never_gate_unless_asked():
+    cur = {**BASE, "wall/us": {**BASE["wall/us"], "value": 50_000.0}}
+    assert diff(_snap(), _snap(cur)).ok
+    assert not diff(_snap(), _snap(cur), gate_wall=True).ok
+
+
+def test_missing_gated_metric_is_a_regression():
+    cur = {k: v for k, v in BASE.items() if k != "lat/sim"}
+    r = diff(_snap(), _snap(cur))
+    assert not r.ok
+    assert {x.name: x for x in r.entries}["lat/sim"].status == "missing"
+    # but a missing *wall* metric is only informational
+    cur2 = {k: v for k, v in BASE.items() if k != "wall/us"}
+    assert diff(_snap(), _snap(cur2)).ok
+
+
+def test_new_metric_is_informational():
+    cur = {**BASE, "fresh": {"value": 1.0, "unit": "count",
+                             "direction": "lower"}}
+    r = diff(_snap(), _snap(cur))
+    assert r.ok
+    assert {x.name: x for x in r.entries}["fresh"].status == "new"
+
+
+def test_per_metric_tolerance_override():
+    cur = {**BASE, "lat/sim": {**BASE["lat/sim"], "value": 1200.0}}
+    # +20% passes the default 25% but fails a 10% override
+    assert diff(_snap(), _snap(cur)).ok
+    assert DEFAULT_TOLERANCE == 0.25
+    assert not diff(_snap(), _snap(cur),
+                    tolerances={"lat/sim": 0.10}).ok
+
+
+def test_zero_baseline_edge():
+    base = {"n": {"value": 0.0, "unit": "count", "direction": "lower"}}
+    same = diff(_snap(base), _snap(base))
+    assert same.ok
+    grew = diff(_snap(base), _snap(
+        {"n": {"value": 3.0, "unit": "count", "direction": "lower"}}))
+    assert not grew.ok                         # 0 → 3 is infinitely worse
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    base = write_snapshot(tmp_path / "base.json", BASE)
+    assert main([str(base), str(base)]) == 0
+    cur = write_snapshot(tmp_path / "cur.json", {
+        **BASE, "lat/sim": {**BASE["lat/sim"], "value": 9000.0}})
+    assert main([str(base), str(cur)]) == 1
+    out = capsys.readouterr().out
+    assert "regressed" in out and "lat/sim" in out
+    # widened tolerance lets the same diff pass
+    assert main([str(base), str(cur), "--tolerance", "10.0"]) == 0
+    # unusable inputs are rc 2 (distinct from "regressed")
+    assert main([str(base)]) == 2
+    assert main([str(base), str(tmp_path / "nope.json")]) == 2
+
+
+def test_bench_emit_feeds_snapshots(tmp_path):
+    from benchmarks import common
+    saved = dict(common.METRICS)
+    try:
+        common.METRICS.clear()
+        common.emit("unit/x", 42.0, unit="sim_us")
+        common.emit("unit/y", 1.5, "note", unit="ratio",
+                    direction="higher")
+        path = write_snapshot(tmp_path / "b.json", common.METRICS,
+                              ["unit"])
+        d = load_snapshot(path)
+        assert d["metrics"]["unit/x"] == {
+            "value": 42.0, "unit": "sim_us", "direction": "lower"}
+        assert d["metrics"]["unit/y"]["direction"] == "higher"
+        assert diff(d, d).ok
+    finally:
+        common.METRICS.clear()
+        common.METRICS.update(saved)

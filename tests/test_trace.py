@@ -1,0 +1,262 @@
+"""repro.telemetry.trace — span-tree reconstruction, critical paths,
+utilization, and the report's causal section.
+
+The determinism surface under test is ``tree_lines``: two seeded replays
+(``planning_time=0.0``) must render byte-identical forests — ids,
+parentage, children order, canonical JSON.  The accounting surface is
+``critical_path``: plan/queue/compute/comm/retry-waste/other must sum to
+each request's recorded latency to float precision, under churn retries
+and mixed-tenant interleaving alike.
+"""
+
+import pytest
+
+from repro.core import EdgeSimulator, SimRequest
+from repro.core.edge_models import EDGE_MODELS, MODEL_DELTA, paper_cluster
+from repro.fleet import ChurnTrace, FleetController
+from repro.load import (ArrivalTrace, FixedServiceModel, LoadConfig,
+                        OpenLoopHarness, TenantSpec)
+from repro.telemetry import (RunStore, TelemetryEvent, TelemetryRecorder,
+                             critical_path, node_utilization,
+                             overlap_headroom, request_critical_paths,
+                             span_trees, tree_lines)
+from repro.telemetry.events import WALL_FIELDS
+from repro.telemetry.report import generate
+from repro.telemetry.trace import (CATEGORIES, REQUEST_ROOTS,
+                                   category_totals, forest, trace_summary)
+
+CHURN = [(0.4, "tx2", "crash"), (3.0, "tx2", "join"),
+         (4.0, "nano", "leave"), (6.0, "nano", "join")]
+
+
+def _churn_run(root, n_requests=6):
+    """A mixed-tenant churn run in replay mode (``planning_time=0.0``)
+    recorded under ``root``: resnet152/vgg19 interleaved, one scripted
+    mid-request crash (forces a retry), a leave/return cycle."""
+    names = ["resnet152", "vgg19"]
+    wl = [SimRequest(i, EDGE_MODELS[names[i % 2]](), 0.8 * i,
+                     MODEL_DELTA[names[i % 2]], slo=2.0)
+          for i in range(n_requests)]
+    store = RunStore(root)
+    rec = TelemetryRecorder(store.new_run("trace"), store=store)
+    fleet = FleetController(paper_cluster(), ChurnTrace.scripted(CHURN),
+                            telemetry=rec)
+    rep = EdgeSimulator(paper_cluster(), "hidp", fleet=fleet,
+                        telemetry=rec, planning_time=0.0).run(wl)
+    rec.close()
+    return store, rec.run, rep
+
+
+# --------------------------------------------------------------------------
+# tree reconstruction
+# --------------------------------------------------------------------------
+
+def test_span_trees_synthetic_parentage_and_orphans():
+    ev = [
+        TelemetryEvent(0, "span", "root", 1.0, span_id=0),
+        TelemetryEvent(1, "span", "child", 0.5, span_id=1, parent_id=0),
+        TelemetryEvent(2, "span", "leaf", 0.1, parent_id=1),
+        TelemetryEvent(3, "counter", "tick", 1.0, parent_id=0),
+        TelemetryEvent(4, "span", "orphan", 0.2, span_id=9, parent_id=77),
+        TelemetryEvent(5, "counter", "lost", 1.0, parent_id=77),
+    ]
+    roots = span_trees(ev)
+    # orphan (parent id nobody claims) is surfaced as a root, not dropped
+    assert [r.name for r in roots] == ["root", "orphan"]
+    root = roots[0]
+    assert [c.name for c in root.children] == ["child"]
+    assert [c.name for c in root.children[0].children] == ["leaf"]
+    # non-span events attach to their parent; unknown parent → dropped
+    assert [e.name for e in root.events] == ["tick"]
+    assert all(e.name != "lost" for n in roots for x in n.walk()
+               for e in x.events)
+    # walk() is depth-first
+    assert [n.name for n in root.walk()] == ["root", "child", "leaf"]
+
+
+def test_churn_run_tree_shape(tmp_path):
+    store, run, rep = _churn_run(tmp_path)
+    roots = forest(store, run)
+    req_roots = [r for r in roots if r.name in REQUEST_ROOTS]
+    assert len(req_roots) == len(rep.records)
+    crashed = [r for r in req_roots
+               if any(not a.event.attrs.get("ok", True)
+                      for a in r.children if a.name == "sim.attempt")]
+    assert crashed, "the scripted crash should fail at least one attempt"
+    for r in req_roots:
+        attempts = [c for c in r.children if c.name == "sim.attempt"]
+        assert attempts, "every request runs at least one attempt"
+        assert attempts[-1].event.attrs["ok"] is True
+        # per-stage shards hang under their attempt, tagged with the
+        # owning request id
+        stage_names = {c.name for a in attempts for c in a.children}
+        assert "sim.compute" in stage_names
+        rid = r.event.attrs["request"]
+        for a in attempts:
+            for c in a.children:
+                if c.name == "sim.compute":
+                    assert c.event.attrs["request"] == rid
+    # retry accounting parents under the *request*, not the dead attempt
+    retried = crashed[0]
+    assert any(e.name == "sim.retry" for e in retried.events)
+
+
+def test_tree_lines_byte_identical_across_seeded_replays(tmp_path):
+    store_a, run_a, _ = _churn_run(tmp_path / "a")
+    store_b, run_b, _ = _churn_run(tmp_path / "b")
+    lines_a = tree_lines(span_trees(store_a.events(run_a)))
+    lines_b = tree_lines(span_trees(store_b.events(run_b)))
+    assert lines_a == lines_b
+    assert len(lines_a) > 50
+    # and the canonical surface really strips only the wall fields
+    for f in WALL_FIELDS:
+        assert all(f'"{f}"' not in ln for ln in lines_a)
+
+
+# --------------------------------------------------------------------------
+# critical paths
+# --------------------------------------------------------------------------
+
+def test_critical_path_sums_to_latency_under_churn(tmp_path):
+    store, run, rep = _churn_run(tmp_path)
+    paths = request_critical_paths(store, run)
+    assert len(paths) == len(rep.records)
+    by_rid = {p.request: p for p in paths}
+    for r in rep.records:
+        p = by_rid[r.request_id]
+        assert p.latency == pytest.approx(r.latency, abs=1e-12)
+        assert abs(p.residual) < 1e-9
+        assert set(p.categories) == set(CATEGORIES)
+        assert all(v >= 0.0 for v in p.categories.values())
+    # the crashed request's doomed attempt is retry-waste wholesale
+    retried = [r for r in rep.records if r.retries][0]
+    assert by_rid[retried.request_id].categories["retry_waste"] > 0
+    clean = [r for r in rep.records if not r.retries][0]
+    assert by_rid[clean.request_id].categories["retry_waste"] == 0.0
+    totals = category_totals(paths)
+    assert sum(totals.values()) == pytest.approx(
+        sum(r.latency for r in rep.records), rel=1e-9)
+
+
+def test_critical_path_rejects_non_request_roots():
+    node = span_trees([TelemetryEvent(0, "span", "sim.attempt", 1.0,
+                                      span_id=0)])[0]
+    with pytest.raises(ValueError, match="not a request root"):
+        critical_path(node)
+
+
+def test_mixed_tenant_interleaving_keeps_trees_disjoint(tmp_path):
+    """Two tenants' requests interleave in one store; every stage shard
+    must land under its own request's tree, never a neighbour's."""
+    store, run, _ = _churn_run(tmp_path, n_requests=8)
+    for r in forest(store, run):
+        if r.name not in REQUEST_ROOTS:
+            continue
+        rid, tenant = r.event.attrs["request"], r.event.tenant
+        for node in r.walk():
+            got = node.event.attrs.get("request")
+            if got is not None:
+                assert got == rid, (node.name, got, rid)
+            if node.event.tenant:
+                assert node.event.tenant == tenant
+
+
+# --------------------------------------------------------------------------
+# load-harness trees
+# --------------------------------------------------------------------------
+
+def _load_run(root):
+    tr = ArrivalTrace.poisson({"chat": 30.0, "batch": 10.0},
+                              horizon=10.0, seed=5)
+    svc = FixedServiceModel({"chat": 0.012, "batch": 0.040})
+    specs = [TenantSpec("chat", slo=0.25, weight=2.0),
+             TenantSpec("batch", slo=1.0)]
+    store = RunStore(root)
+    rec = TelemetryRecorder(store.new_run("load"), store=store)
+    rep = OpenLoopHarness(tr, specs, svc,
+                          LoadConfig(servers=1, queue_capacity=16,
+                                     max_wait=0.5),
+                          telemetry=rec).run()
+    rec.close()
+    return store, rec.run, rep
+
+
+def test_load_request_trees_and_critical_paths(tmp_path):
+    store, run, rep = _load_run(tmp_path)
+    roots = [r for r in forest(store, run) if r.name == "load.request"]
+    assert len(roots) == rep.completed
+    for r in roots:
+        names = [c.name for c in r.children]
+        assert names.count("load.service") == 1
+        assert names.count("load.queue_wait") == 1
+        p = critical_path(r)
+        assert abs(p.residual) < 1e-9
+        assert p.categories["compute"] > 0
+    # shed requests never grow a tree, but their counters cite the
+    # pre-allocated span id of a root that was never emitted — dropped,
+    # not mis-attached
+    shed = store.events(run, kind="counter", name="load.shed")
+    if shed:
+        claimed = {r.event.span_id for r in roots}
+        assert all(e.parent_id not in claimed for e in shed)
+
+
+def test_load_trees_byte_identical_across_replays(tmp_path):
+    store_a, run_a, _ = _load_run(tmp_path / "a")
+    store_b, run_b, _ = _load_run(tmp_path / "b")
+    assert (tree_lines(span_trees(store_a.events(run_a)))
+            == tree_lines(span_trees(store_b.events(run_b))))
+
+
+# --------------------------------------------------------------------------
+# utilization / headroom / report surface
+# --------------------------------------------------------------------------
+
+def test_node_utilization_and_overlap_headroom(tmp_path):
+    store, run, rep = _churn_run(tmp_path)
+    util = node_utilization(store, run)
+    nodes = [k for k in util if k != "medium" and "/" not in k]
+    assert nodes, "compute nodes should have busy intervals"
+    for k, u in util.items():
+        assert u["busy_s"] >= 0 and 0.0 <= u["utilization"] <= 1.0
+        assert u["busy_s"] == pytest.approx(
+            sum(e - s for s, e in u["intervals"]))
+    head = overlap_headroom(store, run)
+    assert 0.0 <= head["total"]["fraction"] <= 1.0
+    # with >1 nodes computing disjointly there must be *some* headroom
+    assert head["total"]["idle_while_peer_busy_s"] > 0
+    summ = trace_summary(store, run)
+    assert summ["requests"] == len(rep.records)
+    assert summ["max_residual_s"] < 1e-9
+    assert sum(summ["category_fractions"].values()) == pytest.approx(
+        1.0, abs=1e-6)
+
+
+def test_report_includes_trace_section_and_timelines(tmp_path):
+    store, run, _ = _churn_run(tmp_path)
+    out = generate(store, run, window=2.0)
+    assert "critical path" in out
+    assert "retry_waste" in out
+    assert "overlap headroom" in out
+    assert "sim.request per 2 s" in out
+    assert "sim.energy per 2 s" in out
+
+
+def test_report_fails_readably_on_zero_span_runs(tmp_path):
+    store = RunStore(tmp_path)
+    rec = TelemetryRecorder(store.new_run("empty"), store=store)
+    rec.counter("something.happened")
+    rec.close()
+    with pytest.raises(ValueError, match="zero span events"):
+        generate(store, rec.run)
+    from repro.telemetry.report import main
+    assert main([str(tmp_path), rec.run]) == 1
+
+
+def test_disabled_recorder_allocates_nothing(tmp_path):
+    rec = TelemetryRecorder("r", enabled=False)
+    with rec.trace("outer") as h:
+        assert h.span_id is None
+        assert rec.child_span("inner", 0.1) is None
+        assert rec.current_span() is None
+    assert rec.events == []
